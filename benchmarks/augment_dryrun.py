@@ -1,0 +1,78 @@
+"""Augment dryrun_results.json with remat-free forward FLOPs (the 'useful
+compute' reference for the roofline) and decode-cache byte counts.
+
+MODEL_FLOPS definitions used in §Roofline:
+  train:   3 x forward FLOPs (remat-free forward; bwd ~ 2x fwd)
+  prefill: forward FLOPs
+  decode:  forward FLOPs
+computed with the exact jaxpr walker on cfg.remat=False — a per-family-exact
+replacement for the 6*N*D napkin formula (which is kept as a cross-check).
+No compilation involved; pure tracing.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, get_config, shape_applicable
+from repro.models import api
+from repro.launch.shapes import abstract_cache, input_specs
+from repro.perf import jaxpr_cost
+
+
+def fwd_cost(arch: str, shape_name: str):
+    cfg = dataclasses.replace(get_config(arch), remat=False)
+    shape = SHAPES[shape_name]
+    params = api.abstract_params(cfg)
+    batch = input_specs(cfg, shape)
+    if shape.kind == "train":
+        fn = lambda p, b: api.train_loss(cfg, p, b)
+        cost = jaxpr_cost.analyze(fn, params, batch)
+        cache_bytes = 0
+    elif shape.kind == "prefill":
+        fn = lambda p, b: api.prefill(cfg, p, b, cache_len=shape.seq_len)
+        cost = jaxpr_cost.analyze(fn, params, batch)
+        cache_bytes = 0
+    else:
+        cache = abstract_cache(cfg, shape)
+        fn = lambda p, b, c, pos: api.decode_step(cfg, p, b, c, pos)
+        cost = jaxpr_cost.analyze(fn, params, batch, cache,
+                                  jax.ShapeDtypeStruct((), jnp.int32))
+        import math
+        cache_bytes = sum(
+            math.prod(x.shape) * x.dtype.itemsize
+            for x in jax.tree.leaves(cache))
+    mult = 3.0 if shape.kind == "train" else 1.0
+    return mult * cost["flops"], cache_bytes
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="dryrun_results.json")
+    args = ap.parse_args()
+    with open(args.json) as f:
+        results = json.load(f)
+    for r in results:
+        if "error" in r or "skipped" in r:
+            continue
+        if "model_flops_global" in r:
+            continue
+        try:
+            mf, cb = fwd_cost(r["arch"], r["shape"])
+            r["model_flops_global"] = mf
+            r["cache_bytes_global"] = cb
+            print(f"{r['arch']} {r['shape']}: useful={mf:.3e} "
+                  f"measured={r.get('jaxpr_flops_global', 0):.3e} "
+                  f"ratio={mf / max(r.get('jaxpr_flops_global', 1), 1):.2f}")
+        except Exception as e:
+            print(f"FAIL {r['arch']} {r['shape']}: {e}")
+    with open(args.json, "w") as f:
+        json.dump(results, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""HGEMV benchmark (paper Fig. 9/10): throughput vs N and nv, plus the
+weak/strong-scaling communication model from the measured structure.
+
+CPU measures the single-device batched pipeline (real timings); the
+multi-GPU scaling columns are model-derived from the same quantities the
+paper reports: per-level compute is embarrassingly parallel below the
+C-level, communication = the halo/gather volumes from ``matvec_comm_bytes``.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.clustering import regular_grid_points
+from repro.core.construction import construct_h2
+from repro.core.kernels_fn import exponential_kernel
+from repro.core.matvec import h2_matvec, h2_matvec_flops
+from repro.core.dist import partition_h2, matvec_comm_bytes
+
+
+def _build(side: int, dim: int = 2, m: int = 32, p: int = 6,
+           eta: float = 0.9):
+    pts = regular_grid_points(side, dim)
+    corr = 0.1 if dim == 2 else 0.2
+    return construct_h2(pts, exponential_kernel(corr), m, p, eta)
+
+
+def time_fn(fn, *args, reps: int = 10) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return float(np.mean(ts[1:-1])) if len(ts) > 2 else float(np.mean(ts))
+
+
+def run(out_rows: List[str]) -> None:
+    rng = np.random.default_rng(0)
+    # --- Fig 9 analogue: throughput vs nv at fixed N (single device) ---
+    shape, data, tree, bs = _build(64)        # N=4096
+    for nv in (1, 4, 16, 64):
+        x = jnp.asarray(rng.standard_normal((shape.n, nv)), jnp.float32)
+        fn = jax.jit(lambda d, xx: h2_matvec(shape, d, xx))
+        sec = time_fn(fn, data, x)
+        fl = h2_matvec_flops(shape, nv)
+        out_rows.append(
+            f"hgemv_nv{nv},{sec*1e6:.1f},gflops={fl/sec/1e9:.2f}"
+            f";N={shape.n};Csp={bs.sparsity_constant()}")
+
+    # --- O(N) scaling of matvec time (paper: linear complexity) ---
+    times = []
+    for side in (32, 64, 128):
+        s2, d2, _, _ = _build(side)
+        x = jnp.asarray(rng.standard_normal((s2.n, 1)), jnp.float32)
+        fn = jax.jit(lambda dd, xx: h2_matvec(s2, dd, xx))
+        sec = time_fn(fn, d2, x, reps=6)
+        times.append((s2.n, sec))
+        out_rows.append(f"hgemv_N{s2.n},{sec*1e6:.1f},")
+    # growth factor per 4x N should be ~4 (linear), not ~16 (quadratic)
+    g1 = times[1][1] / times[0][1]
+    g2 = times[2][1] / times[1][1]
+    out_rows.append(f"hgemv_linearity,{0:.1f},growth_4x={g1:.2f}:{g2:.2f}")
+
+    # --- weak-scaling comm model (Fig 9 right columns) ---
+    shape, data, tree, bs = _build(64, m=16)
+    for p in (2, 4, 8, 16):
+        ds, _ = partition_h2(shape, data, p)
+        for comm in ("ppermute", "allgather"):
+            b = matvec_comm_bytes(ds, 16, comm)
+            out_rows.append(f"hgemv_comm_p{p}_{comm},{0:.1f},bytes={b}")

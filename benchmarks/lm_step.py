@@ -1,0 +1,33 @@
+"""LM substrate benchmark: reduced-config train/decode step times per family
+(mechanism check on CPU; full-size numbers come from the dry-run roofline)."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.models import api
+
+
+def run(out_rows: List[str]) -> None:
+    rng = np.random.default_rng(0)
+    for arch in ("qwen3-0.6b", "rwkv6-7b", "qwen3-moe-30b-a3b"):
+        cfg = get_config(arch).reduced(param_dtype="float32",
+                                       act_dtype="float32")
+        params = api.init_params(cfg, jax.random.PRNGKey(0))
+        batch = {"tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab, (4, 65)), jnp.int32)}
+        step = jax.jit(lambda p, b: jax.value_and_grad(
+            lambda pp: api.train_loss(cfg, pp, b))(p)[0])
+        step(params, batch).block_until_ready()
+        ts = []
+        for _ in range(5):
+            t0 = time.perf_counter()
+            step(params, batch).block_until_ready()
+            ts.append(time.perf_counter() - t0)
+        out_rows.append(f"lm_train_{arch},{np.median(ts)*1e6:.0f},"
+                        f"tokens_per_s={4*64/np.median(ts):.0f}")

@@ -1,0 +1,155 @@
+"""Roofline analysis from the dry-run artifacts (deliverable g).
+
+    PYTHONPATH=src python -m benchmarks.roofline [--json dryrun_results.json]
+
+Per (arch x shape x mesh) cell:
+    compute term    = FLOPs_per_device / peak_FLOP/s
+    memory term     = bytes_per_device / HBM_bw      (unfused upper bound)
+    weight-stream   = weight+opt bytes touched / HBM_bw  (lower bound)
+    collective term = collective_bytes / link_bw
+plus the dominant term, MODEL_FLOPS (6*N*D style), the useful-compute ratio
+MODEL_FLOPS / HLO_FLOPs, and the roofline fraction
+    max(compute) / sum-or-max of terms  (reported both ways).
+
+Hardware constants (TPU v5e-class, per chip): 197 TFLOP/s bf16, 819 GB/s
+HBM, ~50 GB/s/link ICI (3 links usable per chip per axis direction).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+from repro.configs.base import SHAPES, get_config
+from repro.models.config import param_count
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """MODEL_FLOPS: 6*N*D for training (N = active params), 2*N*D for
+    prefill, 2*N*B for decode — plus attention terms where they dominate."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n_total = param_count(cfg)
+    if cfg.moe:
+        # active params: replace expert count with top_k
+        dense_frac = cfg.top_k / max(cfg.n_experts, 1)
+        expert_params = cfg.n_layers * cfg.n_experts * \
+            (3 if cfg.act == "swiglu" else 2) * cfg.d_model * cfg.moe_d_ff
+        n_active = n_total - expert_params * (1 - dense_frac)
+    else:
+        n_active = n_total
+    tokens = shape.global_batch * shape.seq_len
+    attn = 0.0
+    if cfg.family not in ("rwkv",):
+        # causal attention: 2 * 2 * B * S^2/2 * H * dh per layer
+        attn = (2 * shape.global_batch * shape.seq_len ** 2 *
+                cfg.n_heads * cfg.hd * cfg.n_layers)
+    if shape.kind == "train":
+        return 6 * n_active * tokens + 3 * attn
+    if shape.kind == "prefill":
+        return 2 * n_active * tokens + attn
+    # decode: one token per sequence; attention reads the whole cache
+    cache_attn = (2 * 2 * shape.global_batch * shape.seq_len *
+                  cfg.n_kv_heads * cfg.hd * cfg.n_layers)
+    return 2 * n_active * shape.global_batch + cache_attn
+
+
+def weight_bytes_per_device(arch: str, shape_name: str, n_dev: int) -> float:
+    """Minimum HBM traffic: every (sharded) weight is read once per step;
+    training adds optimizer state read+write and gradient write."""
+    cfg = get_config(arch)
+    n = param_count(cfg)
+    if SHAPES[shape_name].kind == "train":
+        # bf16 params + grads, f32 m/v read+write
+        per_param = 2 + 2 + 4 * 4
+    else:
+        per_param = 2
+    return n * per_param / n_dev
+
+
+def analyze_cell(r: Dict) -> Optional[Dict]:
+    if "skipped" in r or "error" in r:
+        return None
+    n_dev = r["n_devices"]
+    fl = r.get("flops_per_device")
+    by = r.get("bytes_per_device")
+    coll = sum(r.get("collectives", {}).values())
+    t_compute = fl / PEAK_FLOPS
+    t_mem_ub = by / HBM_BW
+    wb = weight_bytes_per_device(r["arch"], r["shape"], n_dev)
+    wb += r.get("cache_bytes_global", 0) / n_dev       # decode KV traffic
+    t_mem_lb = wb / HBM_BW
+    t_coll = coll / ICI_BW
+    terms = {"compute": t_compute, "memory_ub": t_mem_ub,
+             "memory_lb": t_mem_lb, "collective": t_coll}
+    dominant = max(("compute", "memory_lb", "collective"),
+                   key=lambda k: terms[k])
+    # useful compute: remat-free forward jaxpr flops (x3 for training),
+    # from benchmarks.augment_dryrun; fall back to the analytic formula
+    mf = r.get("model_flops_global") or model_flops(r["arch"], r["shape"])
+    useful = mf / (fl * n_dev) if fl else 0.0
+    # roofline fraction: the intrinsic step requirement (useful compute or
+    # unavoidable memory traffic, whichever binds) over the achieved bound
+    # (max of the three measured terms, overlap-optimistic) — the score we
+    # optimize in §Perf.  Decode cells are cache-bandwidth workloads, so
+    # mem_lb is their intrinsic floor.
+    t_useful = (mf / n_dev) / PEAK_FLOPS
+    bound = max(t_compute, t_mem_lb, t_coll)
+    frac = max(t_useful, t_mem_lb) / bound if bound > 0 else 0.0
+    return {
+        "arch": r["arch"], "shape": r["shape"],
+        "mesh": "x".join(str(v) for v in r["mesh"].values()),
+        "compute_s": t_compute, "memory_ub_s": t_mem_ub,
+        "memory_lb_s": t_mem_lb, "collective_s": t_coll,
+        "dominant": dominant, "model_flops": mf,
+        "useful_ratio": useful, "roofline_frac": frac,
+        "variant": r.get("variant", "baseline"),
+        "temp_gb": r.get("memory", {}).get("temp_size_in_bytes", 0) / 1e9,
+        "args_gb": r.get("memory", {}).get("argument_size_in_bytes", 0) / 1e9,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="dryrun_results.json")
+    ap.add_argument("--md", action="store_true", help="markdown table")
+    args = ap.parse_args()
+    rows = []
+    with open(args.json) as f:
+        results = json.load(f)
+    for r in results:
+        a = analyze_cell(r)
+        if a is None:
+            tag = f"{r.get('arch')} {r.get('shape')}"
+            why = r.get("skipped", r.get("error", ""))[:60]
+            print(f"# skip {tag}: {why}")
+            continue
+        rows.append(a)
+    if args.md:
+        print("| arch | shape | mesh | compute(s) | mem_lb(s) | mem_ub(s) |"
+              " coll(s) | dominant | useful | roofline |")
+        print("|---|---|---|---|---|---|---|---|---|---|")
+        for a in rows:
+            print(f"| {a['arch']} | {a['shape']} | {a['mesh']} "
+                  f"| {a['compute_s']:.2e} | {a['memory_lb_s']:.2e} "
+                  f"| {a['memory_ub_s']:.2e} | {a['collective_s']:.2e} "
+                  f"| {a['dominant']} | {a['useful_ratio']:.2f} "
+                  f"| {a['roofline_frac']:.2f} |")
+    else:
+        print("arch,shape,mesh,compute_s,mem_lb_s,mem_ub_s,coll_s,dominant,"
+              "useful_ratio,roofline_frac")
+        for a in rows:
+            print(f"{a['arch']},{a['shape']},{a['mesh']},"
+                  f"{a['compute_s']:.3e},{a['memory_lb_s']:.3e},"
+                  f"{a['memory_ub_s']:.3e},{a['collective_s']:.3e},"
+                  f"{a['dominant']},{a['useful_ratio']:.3f},"
+                  f"{a['roofline_frac']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only hgemv,compression_bench]
+
+Prints ``name,us_per_call,derived`` CSV rows.  The roofline table (dry-run
+derived, 256/512-device) is produced separately by ``benchmarks/roofline.py``
+from ``dryrun_results.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+from typing import List
+
+MODULES = ["accuracy", "hgemv", "compression_bench", "fractional", "lm_step"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module subset")
+    args, _ = ap.parse_known_args()
+    mods = args.only.split(",") if args.only else MODULES
+
+    rows: List[str] = []
+    print("name,us_per_call,derived")
+    failed = []
+    for name in mods:
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            before = len(rows)
+            mod.run(rows)
+            for r in rows[before:]:
+                print(r, flush=True)
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED modules: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

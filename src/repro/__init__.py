@@ -1,0 +1,8 @@
+"""repro — distributed JAX/TPU framework for H2 non-local operators.
+
+Reproduction of "H2Opus: a distributed-memory multi-GPU software package
+for non-local operators" (Zampini et al., 2021) with a production LM
+substrate.  See README.md / DESIGN.md.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,18 @@
+"""H2 matrix core (the paper's contribution).
+
+Public API:
+    construct_h2          kernel + points -> (H2Shape, H2Data)
+    h2_matvec             y = A x (multi-vector)
+    orthogonalize         basis orthogonalization (upsweep QR)
+    compress              algebraic recompression (paper §5)
+    partition_h2          block-row decomposition for P devices
+    make_dist_matvec      shard_map distributed matvec
+    make_dist_compress    shard_map distributed recompression
+"""
+from .structure import H2Shape, H2Data, abstract_data, shape_of    # noqa
+from .construction import construct_h2, dense_reference           # noqa
+from .matvec import h2_matvec, h2_matvec_flops                    # noqa
+from .orthogonalize import orthogonalize                          # noqa
+from .compression import compress                                 # noqa
+from .dist import (partition_h2, make_dist_matvec,                # noqa
+                   make_dist_compress, matvec_comm_bytes)

@@ -1,0 +1,132 @@
+"""Tensor-product Chebyshev interpolation bases (host/numpy).
+
+The paper's initial H^2 approximation (§5, §6.3) interpolates the kernel with
+Chebyshev polynomials on cluster bounding boxes: a 6x6 grid in 2D (rank 36),
+tri-cubic in 3D (rank 64).  The leaf bases U/V are Lagrange-Chebyshev
+evaluations at the cluster's points; interlevel transfers E/F re-interpolate a
+parent's polynomial basis at the child's Chebyshev nodes (nested bases);
+coupling blocks S are kernel evaluations at Chebyshev node pairs.
+"""
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import numpy as np
+
+from .clustering import ClusterTree
+
+
+def cheb_nodes(p: int) -> np.ndarray:
+    """Chebyshev points of the first kind on [-1, 1]."""
+    i = np.arange(p)
+    return np.cos((2 * i + 1) * np.pi / (2 * p))
+
+
+def lagrange_eval(nodes: np.ndarray, x: np.ndarray) -> np.ndarray:
+    """L[j](x_i): Lagrange basis on ``nodes`` evaluated at ``x`` -> [len(x), p]."""
+    p = nodes.shape[0]
+    out = np.ones((x.shape[0], p))
+    for j in range(p):
+        for q in range(p):
+            if q != j:
+                out[:, j] *= (x - nodes[q]) / (nodes[j] - nodes[q])
+    return out
+
+
+def box_nodes(p: int, lo: np.ndarray, hi: np.ndarray) -> np.ndarray:
+    """Tensor Chebyshev grid in a box -> [p**dim, dim].
+
+    Degenerate box dimensions (hi==lo) collapse to the midpoint.
+    """
+    dim = lo.shape[0]
+    t = 0.5 * (cheb_nodes(p) + 1.0)           # [0,1]
+    axes = [lo[d] + (hi[d] - lo[d]) * t for d in range(dim)]
+    mesh = np.meshgrid(*axes, indexing="ij")
+    return np.stack([m.ravel() for m in mesh], axis=-1)
+
+
+def box_lagrange(p: int, lo: np.ndarray, hi: np.ndarray,
+                 pts: np.ndarray) -> np.ndarray:
+    """Tensor Lagrange basis of a box evaluated at points -> [npts, p**dim]."""
+    dim = lo.shape[0]
+    per_dim = []
+    nodes = cheb_nodes(p)
+    for d in range(dim):
+        w = hi[d] - lo[d]
+        if w <= 0:
+            # degenerate dim: constant interpolation
+            ld = np.zeros((pts.shape[0], p))
+            ld[:, :] = 1.0 / p
+            # better: all weight on every node equally is wrong for p>1;
+            # use exact: value is constant, any convex combo works.
+        else:
+            xr = 2.0 * (pts[:, d] - lo[d]) / w - 1.0
+            ld = lagrange_eval(nodes, xr)
+        per_dim.append(ld)
+    out = per_dim[0]
+    for d in range(1, dim):
+        out = np.einsum("ia,ib->iab", out, per_dim[d]).reshape(pts.shape[0], -1)
+    return out
+
+
+def build_chebyshev_bases(tree: ClusterTree, p: int):
+    """Leaf bases and transfer matrices for every level.
+
+    Returns (u_leaf [2**depth, m, k], transfers list e[l] [2**l, k, k] for
+    l=1..depth, k = p**dim).  For a symmetric kernel V==U, F==E.
+    """
+    dim = tree.dim
+    k = p ** dim
+    depth = tree.depth
+    m = tree.leaf_size
+    nl = 1 << depth
+
+    u_leaf = np.zeros((nl, m, k))
+    lo_l, hi_l = tree.box_min[depth], tree.box_max[depth]
+    for i in range(nl):
+        a, b = tree.index_range(depth, i)
+        u_leaf[i] = box_lagrange(p, lo_l[i], hi_l[i], tree.points[a:b])
+
+    transfers = [np.zeros((1, 0, 0))]
+    for l in range(1, depth + 1):
+        nn = 1 << l
+        e = np.zeros((nn, k, k))
+        for c in range(nn):
+            par = c // 2
+            child_nodes = box_nodes(p, tree.box_min[l][c], tree.box_max[l][c])
+            e[c] = box_lagrange(p, tree.box_min[l - 1][par],
+                                tree.box_max[l - 1][par], child_nodes)
+        transfers.append(e)
+    return u_leaf, transfers
+
+
+def build_coupling(tree: ClusterTree, p: int, level: int, rows: np.ndarray,
+                   cols: np.ndarray,
+                   kernel: Callable[[np.ndarray, np.ndarray], np.ndarray]
+                   ) -> np.ndarray:
+    """S_ts = kernel at Chebyshev-node pairs -> [nb, k, k]."""
+    k = p ** tree.dim
+    nb = rows.shape[0]
+    out = np.zeros((nb, k, k))
+    lo, hi = tree.box_min[level], tree.box_max[level]
+    # cache per-node chebyshev grids
+    uniq = np.unique(np.concatenate([rows, cols])) if nb else np.zeros(0, np.int64)
+    grids = {int(i): box_nodes(p, lo[i], hi[i]) for i in uniq}
+    for b in range(nb):
+        xt = grids[int(rows[b])]
+        ys = grids[int(cols[b])]
+        out[b] = kernel(xt[:, None, :], ys[None, :, :])
+    return out
+
+
+def build_dense(tree: ClusterTree, rows: np.ndarray, cols: np.ndarray,
+                kernel: Callable[[np.ndarray, np.ndarray], np.ndarray]
+                ) -> np.ndarray:
+    m = tree.leaf_size
+    nb = rows.shape[0]
+    out = np.zeros((nb, m, m))
+    for b in range(nb):
+        a0, a1 = tree.index_range(tree.depth, int(rows[b]))
+        c0, c1 = tree.index_range(tree.depth, int(cols[b]))
+        out[b] = kernel(tree.points[a0:a1, None, :], tree.points[None, c0:c1, :])
+    return out

@@ -1,0 +1,244 @@
+"""Algebraic H^2 recompression (paper §5).
+
+Three passes, all batched per level (the paper's downsweep/upsweep structure):
+
+1. ``compression_weights`` — downsweep computing the re-weighting factors
+   ``R_t`` per basis node from QR of the stacked ``[R_parent E^T; S^T ...]``
+   blocks (paper Eq. 2–4).  Requires orthogonal bases (run ``orthogonalize``
+   first).
+2. ``truncate`` — upsweep of batched SVDs.  Because the bases are orthonormal,
+   the SVD of the re-weighted basis ``U R^T`` ([m, k]) reduces to the SVD of
+   the small ``R^T`` ([k, k]) at the leaves, and of the stacked projected
+   transfers at inner nodes.  Produces the truncated basis (new leaf bases +
+   transfer matrices) and the old->new projection maps ``P = U'^T U``.
+3. Coupling projection ``S' = P_row S P_col^T`` (batched GEMM, paper §5.2 end).
+
+Rank selection: ``target_ranks`` (static per level, fully jittable — this is
+what the multi-pod dry-run lowers) or ``tol`` (singular-value threshold,
+host-driven; used by the numerics tests and the application drivers).
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .structure import H2Data, H2Shape
+
+
+def _batched_qr_r(a: jax.Array, backend: str) -> jax.Array:
+    """R factor only."""
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+        return kops.batched_qr(a)[1]
+    return jnp.linalg.qr(a, mode="r")
+
+
+def _batched_svd(a: jax.Array, backend: str):
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+        return kops.batched_svd(a)
+    u, s, vt = jnp.linalg.svd(a, full_matrices=False)
+    return u, s, vt
+
+
+def _slot_positions(idx: jax.Array, n_nodes: int) -> jax.Array:
+    """Position of each (sorted) block within its row/column group."""
+    start = jnp.searchsorted(idx, jnp.arange(n_nodes, dtype=idx.dtype))
+    return jnp.arange(idx.shape[0], dtype=idx.dtype) - start[idx]
+
+
+def _stack_blocks(blocks: jax.Array, idx: jax.Array, n_nodes: int,
+                  maxb: int) -> jax.Array:
+    """Scatter [nb,k,k] blocks into [n_nodes, maxb*k, k] stacks by group."""
+    k1, k2 = blocks.shape[-2], blocks.shape[-1]
+    pos = _slot_positions(idx, n_nodes)
+    flat = jnp.zeros((n_nodes * maxb, k1, k2), blocks.dtype)
+    flat = flat.at[idx * maxb + pos].set(blocks)
+    return flat.reshape(n_nodes, maxb * k1, k2)
+
+
+def compression_weights(shape: H2Shape, data: H2Data, backend: str = "jnp"
+                        ) -> Tuple[List[jax.Array], List[jax.Array]]:
+    """Downsweep computing R_t per node for the row (U) and column (V) trees."""
+    depth = shape.depth
+    ranks = shape.ranks
+
+    def sweep(transfers, s_blocks_fn, idx_fn, maxb_tuple):
+        r: List[jax.Array] = [None] * (depth + 1)
+        r[0] = jnp.zeros((1, ranks[0], ranks[0]), data.u_leaf.dtype)
+        for l in range(1, depth + 1):
+            nn = shape.nodes(l)
+            kl, kp = ranks[l], ranks[l - 1]
+            # parent part: R_parent @ E_c^T -> [2**l, k_{l-1}, k_l]
+            rpar = jnp.repeat(r[l - 1], 2, axis=0)
+            par = jnp.einsum("cij,ckj->cik", rpar, transfers[l])
+            pieces = [par]
+            if shape.coupling_counts[l] > 0 and maxb_tuple[l] > 0:
+                blk = s_blocks_fn(l)                       # [nb, k_l, k_l]
+                idx = idx_fn(l)
+                pieces.append(_stack_blocks(blk, idx, nn, maxb_tuple[l]))
+            stack = jnp.concatenate(pieces, axis=1)
+            if stack.shape[1] < kl:                        # ensure R is [k_l, k_l]
+                pad = jnp.zeros((nn, kl - stack.shape[1], kl), stack.dtype)
+                stack = jnp.concatenate([stack, pad], axis=1)
+            r[l] = _batched_qr_r(stack, backend)[..., :kl, :]
+        return r
+
+    # Row tree: blocks grouped by row, entries S^T (paper Eq. 4).
+    def s_t(l):
+        return jnp.swapaxes(data.s[l], -1, -2)
+
+    ru = sweep(data.e, s_t, lambda l: data.s_rows[l], shape.row_maxb)
+
+    # Column tree: blocks grouped by column, entries S (un-transposed).
+    # s_cols is sorted within rows only; sort by column for grouping.
+    def s_by_col(l):
+        order = jnp.argsort(data.s_cols[l], stable=True)
+        return jnp.take(data.s[l], order, axis=0)
+
+    def col_idx(l):
+        return jnp.sort(data.s_cols[l])
+
+    rv = sweep(data.f, s_by_col, col_idx, shape.col_maxb)
+    return ru, rv
+
+
+def truncate(shape: H2Shape, data: H2Data, ru: List[jax.Array],
+             rv: List[jax.Array], target_ranks: Sequence[int],
+             backend: str = "jnp") -> Tuple[H2Shape, H2Data]:
+    """Upsweep truncation + coupling projection with static target ranks."""
+    depth = shape.depth
+    tr = list(target_ranks)
+
+    def sweep(leaf, transfers, r):
+        """Returns (new_leaf, new_transfers, p[l] projections)."""
+        p: List[jax.Array] = [None] * (depth + 1)
+        new_t: List[jax.Array] = [transfers[0]] + [None] * depth
+        # leaf: SVD of R^T (U orthonormal)
+        w, _, _ = _batched_svd(jnp.swapaxes(r[depth], -1, -2), backend)
+        rq = min(tr[depth], w.shape[-1])
+        wk = w[..., :rq]                                  # [nl, k, r]
+        new_leaf = jnp.einsum("nmk,nkr->nmr", leaf, wk)
+        p[depth] = jnp.swapaxes(wk, -1, -2)               # [nl, r, k]
+        for l in range(depth, 0, -1):
+            nn = shape.nodes(l)
+            # children candidate: P_c @ E_c -> [2**l, r_l, k_{l-1}]
+            pe = jnp.einsum("crk,ckp->crp", p[l], transfers[l])
+            rl = pe.shape[1]
+            stack = pe.reshape(nn // 2, 2 * rl, -1)       # [2**{l-1}, 2r_l, k_{l-1}]
+            m = jnp.einsum("nik,njk->nij", stack, r[l - 1])
+            g, _, _ = _batched_svd(m, backend)            # [.., 2r_l, *]
+            rp = min(tr[l - 1], g.shape[-1], 2 * rl)
+            gk = g[..., :rp]                              # [.., 2r_l, rp]
+            new_t[l] = gk.reshape(nn, rl, rp)             # split children rows
+            p[l - 1] = jnp.einsum("nir,nik->nrk", gk, stack)
+        return new_leaf, new_t, p
+
+    u_leaf, e_new, pu = sweep(data.u_leaf, data.e, ru)
+    if shape.symmetric and data.v_leaf is data.u_leaf:
+        v_leaf, f_new, pv = u_leaf, e_new, pu
+    else:
+        v_leaf, f_new, pv = sweep(data.v_leaf, data.f, rv)
+
+    s_new = []
+    new_counts = []
+    for l in range(depth + 1):
+        if shape.coupling_counts[l] == 0:
+            s_new.append(jnp.zeros((0, pu[l].shape[1], pv[l].shape[1]),
+                                   u_leaf.dtype))
+            new_counts.append(0)
+            continue
+        pl = jnp.take(pu[l], data.s_rows[l], axis=0)      # [nb, r, k]
+        pr = jnp.take(pv[l], data.s_cols[l], axis=0)
+        s_new.append(jnp.einsum("brk,bkj,bsj->brs", pl, data.s[l], pr))
+        new_counts.append(shape.coupling_counts[l])
+
+    new_ranks = tuple(int(pu[l].shape[1]) for l in range(depth + 1))
+    new_shape = H2Shape(n=shape.n, leaf_size=shape.leaf_size, depth=depth,
+                        ranks=new_ranks,
+                        coupling_counts=tuple(new_counts),
+                        dense_count=shape.dense_count,
+                        symmetric=shape.symmetric,
+                        row_maxb=shape.row_maxb, col_maxb=shape.col_maxb)
+    new_data = H2Data(u_leaf=u_leaf, v_leaf=v_leaf, e=e_new, f=f_new,
+                      s=s_new, s_rows=list(data.s_rows),
+                      s_cols=list(data.s_cols), dense=data.dense,
+                      d_rows=data.d_rows, d_cols=data.d_cols)
+    return new_shape, new_data
+
+
+def pick_ranks_by_tol(shape: H2Shape, data: H2Data, ru: List[jax.Array],
+                      rv: List[jax.Array], tol: float,
+                      backend: str = "jnp") -> Tuple[int, ...]:
+    """Eagerly sweep the truncation picking rank_l = #\\{sigma > tol*scale\\}.
+
+    The scale is the largest singular value seen at the leaf level (a proxy
+    for the norm of the low-rank part, making ``tol`` a relative threshold).
+    """
+    depth = shape.depth
+    # leaf sigmas from both trees
+    _, s_u, _ = _batched_svd(jnp.swapaxes(ru[depth], -1, -2), backend)
+    _, s_v, _ = _batched_svd(jnp.swapaxes(rv[depth], -1, -2), backend)
+    scale = float(jnp.maximum(s_u.max(), s_v.max()))
+    thresh = tol * scale
+
+    ranks = [0] * (depth + 1)
+
+    def count(s):
+        return int(jnp.maximum((s > thresh).sum(axis=-1).max(), 1))
+
+    ranks[depth] = max(count(s_u), count(s_v))
+
+    # probe the upsweep eagerly with per-level picked ranks
+    def sweep_probe(leaf, transfers, r):
+        picked = [0] * (depth + 1)
+        w, s, _ = _batched_svd(jnp.swapaxes(r[depth], -1, -2), backend)
+        picked[depth] = count(s)
+        rq = ranks[depth]
+        p = jnp.swapaxes(w[..., :rq], -1, -2)
+        for l in range(depth, 0, -1):
+            nn = shape.nodes(l)
+            pe = jnp.einsum("crk,ckp->crp", p, transfers[l])
+            rl = pe.shape[1]
+            stack = pe.reshape(nn // 2, 2 * rl, -1)
+            m = jnp.einsum("nik,njk->nij", stack, r[l - 1])
+            g, s, _ = _batched_svd(m, backend)
+            picked[l - 1] = min(count(s), 2 * rl)
+            rp = picked[l - 1]
+            gk = g[..., :rp]
+            p = jnp.einsum("nir,nik->nrk", gk, stack)
+        return picked
+
+    pu = sweep_probe(data.u_leaf, data.e, ru)
+    pv = pu if (shape.symmetric and data.v_leaf is data.u_leaf) else \
+        sweep_probe(data.v_leaf, data.f, rv)
+    out = [max(a, b) for a, b in zip(pu, pv)]
+    out[depth] = ranks[depth]
+    # never exceed current ranks
+    return tuple(min(o, k) for o, k in zip(out, shape.ranks))
+
+
+def compress(shape: H2Shape, data: H2Data, tol: Optional[float] = None,
+             target_ranks: Optional[Sequence[int]] = None,
+             backend: str = "jnp", assume_orthogonal: bool = False
+             ) -> Tuple[H2Shape, H2Data]:
+    """Full recompression: orthogonalize -> weights -> truncate -> project."""
+    from .orthogonalize import orthogonalize
+    from .structure import shape_of
+    if not assume_orthogonal:
+        data = orthogonalize(shape, data, backend=backend)
+        s2 = shape_of(data, shape.leaf_size, shape.symmetric)
+        shape = H2Shape(n=s2.n, leaf_size=s2.leaf_size, depth=s2.depth,
+                        ranks=s2.ranks, coupling_counts=s2.coupling_counts,
+                        dense_count=s2.dense_count, symmetric=s2.symmetric,
+                        row_maxb=shape.row_maxb, col_maxb=shape.col_maxb)
+    ru, rv = compression_weights(shape, data, backend)
+    if target_ranks is None:
+        if tol is None:
+            raise ValueError("need tol or target_ranks")
+        target_ranks = pick_ranks_by_tol(shape, data, ru, rv, tol, backend)
+    return truncate(shape, data, ru, rv, tuple(target_ranks), backend)

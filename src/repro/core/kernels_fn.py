@@ -1,0 +1,55 @@
+"""Kernel functions for the paper's test sets (host/numpy evaluation).
+
+- 2D/3D exponential kernels (spatial statistics / Gaussian process, §6.1)
+- fractional-diffusion kernel with variable diffusivity (§6.4)
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import numpy as np
+
+
+def exponential_kernel(correlation_length: float) -> Callable:
+    """exp(-|x-y| / l) — the paper's covariance kernels (§6.1)."""
+    def k(x: np.ndarray, y: np.ndarray) -> np.ndarray:
+        r = np.linalg.norm(x - y, axis=-1)
+        return np.exp(-r / correlation_length)
+    return k
+
+
+def bump(x: np.ndarray, c: float, ell: float) -> np.ndarray:
+    """Paper Eq. (7)."""
+    r = (x - c) / (ell / 2.0)
+    out = np.zeros_like(x)
+    inside = np.abs(r) < 1.0
+    out[inside] = np.exp(-1.0 / (1.0 - r[inside] ** 2))
+    return out
+
+
+def diffusivity_2d(x: np.ndarray) -> np.ndarray:
+    """kappa(x) = 1 + f(x1; 0, 1.5) f(x2; 0, 2.0) — paper Eq. (6)."""
+    return 1.0 + bump(x[..., 0], 0.0, 1.5) * bump(x[..., 1], 0.0, 2.0)
+
+
+def fractional_kernel_2d(beta: float) -> Callable:
+    """K(x,y) = -2 a(x,y) / |y-x|^(2+2*beta), a = sqrt(kappa(x) kappa(y)).
+
+    Paper Eq. (11); the singular diagonal is excluded (zeroed) — the diagonal
+    matrix D of Eq. (10) is assembled separately via an H^2 matvec with 1.
+    """
+    def k(x: np.ndarray, y: np.ndarray) -> np.ndarray:
+        r = np.linalg.norm(x - y, axis=-1)
+        a = np.sqrt(diffusivity_2d(x) * diffusivity_2d(y))
+        with np.errstate(divide="ignore"):
+            v = -2.0 * a / np.maximum(r, 1e-300) ** (2.0 + 2.0 * beta)
+        return np.where(r == 0.0, 0.0, v)
+    return k
+
+
+def fractional_kernel_2d_positive(beta: float) -> Callable:
+    """+2a/|y-x|^(2+2b): used for the diagonal D = Khat @ 1 (Eq. 10)."""
+    neg = fractional_kernel_2d(beta)
+    def k(x, y):
+        return -neg(x, y)
+    return k

@@ -1,0 +1,68 @@
+"""Dense reconstruction of an H^2 matrix (tests/validation only, O(N^2))."""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from .structure import H2Data, H2Shape
+
+
+def explicit_bases(shape_depth: int, leaf: np.ndarray,
+                   transfers: List[np.ndarray]) -> List[np.ndarray]:
+    """Expand nested bases into explicit per-level bases.
+
+    Returns list over levels l=0..depth of arrays [2**l, n>>l, k_l].
+    """
+    depth = shape_depth
+    out: List[np.ndarray] = [None] * (depth + 1)
+    out[depth] = leaf
+    for l in range(depth, 0, -1):
+        u = out[l]                              # [2**l, w, k_l]
+        e = transfers[l]                        # [2**l, k_l, k_{l-1}]
+        ue = np.einsum("cwk,ckp->cwp", u, e)    # [2**l, w, k_{l-1}]
+        nn, w, kp = ue.shape
+        out[l - 1] = ue.reshape(nn // 2, 2 * w, kp)
+    return out
+
+
+def reconstruct_dense(shape: H2Shape, data: H2Data) -> np.ndarray:
+    """A = A_de + sum over levels/blocks of U_t S_ts V_s^T (numpy)."""
+    n, m = shape.n, shape.leaf_size
+    u = explicit_bases(shape.depth, np.asarray(data.u_leaf),
+                       [np.asarray(e) for e in data.e])
+    v = explicit_bases(shape.depth, np.asarray(data.v_leaf),
+                       [np.asarray(f) for f in data.f])
+    a = np.zeros((n, n))
+    for l in range(shape.depth + 1):
+        if shape.coupling_counts[l] == 0:
+            continue
+        w = n >> l
+        rows = np.asarray(data.s_rows[l])
+        cols = np.asarray(data.s_cols[l])
+        s = np.asarray(data.s[l])
+        for b in range(rows.shape[0]):
+            t, c = int(rows[b]), int(cols[b])
+            blk = u[l][t] @ s[b] @ v[l][c].T
+            a[t * w:(t + 1) * w, c * w:(c + 1) * w] += blk
+    dr = np.asarray(data.d_rows)
+    dc = np.asarray(data.d_cols)
+    de = np.asarray(data.dense)
+    for b in range(dr.shape[0]):
+        t, c = int(dr[b]), int(dc[b])
+        a[t * m:(t + 1) * m, c * m:(c + 1) * m] += de[b]
+    return a
+
+
+def check_orthogonal(shape: H2Shape, data: H2Data, tol: float = 1e-4) -> float:
+    """Max deviation of V^T V from identity across all levels."""
+    worst = 0.0
+    for leaf, tr in ((data.u_leaf, data.e), (data.v_leaf, data.f)):
+        bases = explicit_bases(shape.depth, np.asarray(leaf),
+                               [np.asarray(t) for t in tr])
+        for l in range(shape.depth + 1):
+            b = bases[l]
+            gram = np.einsum("cwk,cwj->ckj", b, b)
+            eye = np.eye(gram.shape[-1])[None]
+            worst = max(worst, float(np.abs(gram - eye).max()))
+    return worst

@@ -1,0 +1,145 @@
+"""Static structure + runtime data layout of an H^2 matrix.
+
+Design: the *structure* (which blocks exist, at which level, block counts,
+ranks) is a small static object baked into the jitted program as shapes only.
+The *index arrays* (rows/cols of coupling and dense blocks) and the *value
+arrays* (bases U/V, transfers E/F, coupling S, dense leaves D) are runtime
+inputs.  This is the JAX analogue of H2Opus marshaling: every level is one
+contiguous batch, and the dry-run can describe a 100M-point operator with
+``ShapeDtypeStruct``s without ever allocating it.
+
+Naming follows the paper (Table 1):
+  U, V   row / column basis trees (leaf bases stored explicitly)
+  E, F   interlevel transfer matrices of U / V
+  S      coupling-matrix tree (one block-sparse matrix per level)
+  A_de   dense leaf blocks at the finest level
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class H2Shape:
+    """Static description of an H^2 matrix (hashable; safe to close over)."""
+
+    n: int                      # matrix dimension
+    leaf_size: int              # m
+    depth: int                  # leaf level index; level l has 2**l nodes
+    ranks: Tuple[int, ...]      # rank k[l] for l = 0..depth
+    coupling_counts: Tuple[int, ...]  # number of S blocks per level, l = 0..depth
+    dense_count: int            # number of dense leaf blocks
+    symmetric: bool = True      # V tree == U tree structure (kernel symmetric)
+    # static max blocks per block-row / block-column at each level (for the
+    # compression stacking; bounded by the sparsity constant C_sp)
+    row_maxb: Optional[Tuple[int, ...]] = None
+    col_maxb: Optional[Tuple[int, ...]] = None
+
+    @property
+    def n_leaves(self) -> int:
+        return 1 << self.depth
+
+    def nodes(self, level: int) -> int:
+        return 1 << level
+
+    def coupling_levels(self) -> List[int]:
+        return [l for l in range(self.depth + 1) if self.coupling_counts[l] > 0]
+
+    def memory_lowrank(self) -> int:
+        """Number of scalars in the low-rank part (bases+transfers+couplings)."""
+        m = self.leaf_size
+        tot = self.n_leaves * m * self.ranks[self.depth] * (1 if self.symmetric else 2)
+        for l in range(1, self.depth + 1):
+            tot += self.nodes(l) * self.ranks[l] * self.ranks[l - 1] * (
+                1 if self.symmetric else 2)
+        for l in range(self.depth + 1):
+            tot += self.coupling_counts[l] * self.ranks[l] * self.ranks[l]
+        return tot
+
+    def memory_dense(self) -> int:
+        return self.dense_count * self.leaf_size * self.leaf_size
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class H2Data:
+    """Runtime arrays of an H^2 matrix (a JAX pytree).
+
+    Per-level lists are indexed by level ``l``; entries for levels that carry
+    no data are zero-size arrays (kept so the pytree structure is static).
+    """
+
+    u_leaf: jax.Array                 # [2**depth, m, k_leaf]
+    v_leaf: jax.Array                 # [2**depth, m, k_leaf] (alias of u for symmetric)
+    e: List[jax.Array]                # l=0..depth; e[l]: [2**l, k_l, k_{l-1}] (e[0] empty)
+    f: List[jax.Array]                # same for V tree
+    s: List[jax.Array]                # l=0..depth; s[l]: [nb_l, k_l, k_l]
+    s_rows: List[jax.Array]           # [nb_l] int32 block-row (node) index
+    s_cols: List[jax.Array]           # [nb_l] int32 block-col (node) index
+    dense: jax.Array                  # [nbd, m, m]
+    d_rows: jax.Array                 # [nbd] int32
+    d_cols: jax.Array                 # [nbd] int32
+
+    def tree_flatten(self):
+        leaves = (self.u_leaf, self.v_leaf, tuple(self.e), tuple(self.f),
+                  tuple(self.s), tuple(self.s_rows), tuple(self.s_cols),
+                  self.dense, self.d_rows, self.d_cols)
+        return leaves, None
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        (u, v, e, f, s, sr, sc, de, dr, dc) = leaves
+        return cls(u, v, list(e), list(f), list(s), list(sr), list(sc),
+                   de, dr, dc)
+
+
+def shape_of(data: H2Data, leaf_size: int, symmetric: bool = True) -> H2Shape:
+    """Recover the static H2Shape from an H2Data pytree (works on SDS too)."""
+    depth = len(data.e) - 1
+    ranks = [0] * (depth + 1)
+    ranks[depth] = data.u_leaf.shape[-1]
+    for l in range(depth, 0, -1):
+        ranks[l - 1] = data.e[l].shape[-1]
+    counts = tuple(int(data.s[l].shape[0]) for l in range(depth + 1))
+    n = data.u_leaf.shape[0] * leaf_size
+    return H2Shape(n=n, leaf_size=leaf_size, depth=depth, ranks=tuple(ranks),
+                   coupling_counts=counts, dense_count=int(data.dense.shape[0]),
+                   symmetric=symmetric)
+
+
+def abstract_data(shape: H2Shape, dtype=jnp.float32) -> H2Data:
+    """ShapeDtypeStruct stand-ins for every array — used by the dry-run."""
+    sds = jax.ShapeDtypeStruct
+    m, kq = shape.leaf_size, shape.ranks[shape.depth]
+    nl = shape.n_leaves
+    e, f, s, sr, sc = [], [], [], [], []
+    for l in range(shape.depth + 1):
+        if l == 0:
+            e.append(sds((0, 0, 0), dtype))
+            f.append(sds((0, 0, 0), dtype))
+        else:
+            e.append(sds((shape.nodes(l), shape.ranks[l], shape.ranks[l - 1]), dtype))
+            f.append(sds((shape.nodes(l), shape.ranks[l], shape.ranks[l - 1]), dtype))
+        nb = shape.coupling_counts[l]
+        s.append(sds((nb, shape.ranks[l], shape.ranks[l]), dtype))
+        sr.append(sds((nb,), jnp.int32))
+        sc.append(sds((nb,), jnp.int32))
+    return H2Data(
+        u_leaf=sds((nl, m, kq), dtype), v_leaf=sds((nl, m, kq), dtype),
+        e=e, f=f, s=s, s_rows=sr, s_cols=sc,
+        dense=sds((shape.dense_count, m, m), dtype),
+        d_rows=sds((shape.dense_count,), jnp.int32),
+        d_cols=sds((shape.dense_count,), jnp.int32))
+
+
+def zeros_data(shape: H2Shape, dtype=jnp.float32) -> H2Data:
+    """Concrete zero-initialized arrays matching ``shape`` (tests/bench)."""
+    ab = abstract_data(shape, dtype)
+    def mk(x):
+        return jnp.zeros(x.shape, x.dtype)
+    return jax.tree.map(mk, ab)

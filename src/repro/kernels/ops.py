@@ -1,0 +1,35 @@
+"""Jit'd public wrappers over the Pallas kernels.
+
+``INTERPRET`` is True in this CPU container (Pallas interpret mode executes
+the kernel bodies in Python for correctness validation); on a real TPU set
+``repro.kernels.ops.INTERPRET = False`` (or env REPRO_PALLAS_INTERPRET=0)
+and the same calls compile to Mosaic.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+from . import batched_gemm as _bg
+from . import batched_qr as _bq
+from . import batched_svd as _bs
+from . import coupling_mv as _cm
+
+INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+def batched_gemm(a: jax.Array, b: jax.Array, **kw) -> jax.Array:
+    return _bg.batched_gemm(a, b, interpret=INTERPRET, **kw)
+
+
+def batched_qr(a: jax.Array, **kw):
+    return _bq.batched_qr(a, interpret=INTERPRET, **kw)
+
+
+def batched_svd(a: jax.Array, **kw):
+    return _bs.batched_svd(a, interpret=INTERPRET, **kw)
+
+
+def coupling_mv(s_pad: jax.Array, xg_pad: jax.Array, *, maxb: int, **kw):
+    return _cm.coupling_mv(s_pad, xg_pad, maxb=maxb, interpret=INTERPRET, **kw)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def batched_gemm(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.einsum("bmk,bkn->bmn", a, b)
+
+
+def batched_qr(a: jax.Array):
+    return jnp.linalg.qr(a, mode="reduced")
+
+
+def batched_svd(a: jax.Array):
+    u, s, vt = jnp.linalg.svd(a, full_matrices=False)
+    return u, s, vt
+
+
+def coupling_mv(s_pad: jax.Array, xg_pad: jax.Array, *, maxb: int) -> jax.Array:
+    total, k, _ = s_pad.shape
+    rows = total // maxb
+    prod = jnp.einsum("bij,bjv->biv", s_pad, xg_pad)
+    return prod.reshape(rows, maxb, k, -1).sum(axis=1)

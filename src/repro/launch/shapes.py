@@ -1,0 +1,107 @@
+"""Input ShapeDtypeStructs per (arch x shape) cell + their shardings.
+
+``input_specs`` returns stand-ins for every model input (tokens plus stub
+modality embeddings per the assignment: the frontend of [audio]/[vlm] archs
+is a precomputed-embedding stub).  Nothing is allocated.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ShapeCfg
+from repro.models.config import ModelConfig
+from repro.models import api
+from repro.parallel.sharding import Rules
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeCfg) -> Dict[str, Any]:
+    b = shape.global_batch
+    s = shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    dt = jnp.dtype(cfg.act_dtype)
+    if shape.kind == "train":
+        batch = {"tokens": sds((b, s + 1), jnp.int32)}
+    elif shape.kind == "prefill":
+        batch = {"tokens": sds((b, s), jnp.int32)}
+    else:  # decode: one new token against a seq_len cache
+        batch = {"tokens": sds((b, 1), jnp.int32)}
+    if cfg.family == "vlm":
+        batch["img_embed"] = sds((b, cfg.n_img_tokens, cfg.d_model), dt)
+    if cfg.family == "audio" and shape.kind != "decode":
+        batch["frames"] = sds((b, cfg.n_frames, cfg.d_model), dt)
+    return batch
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeCfg, rules: Rules
+                ) -> Dict[str, Any]:
+    """PartitionSpecs matching input_specs."""
+    out = {"tokens": P(rules.dp, None)}
+    if cfg.family == "vlm":
+        out["img_embed"] = P(rules.dp, None, None)
+    if cfg.family == "audio" and shape.kind != "decode":
+        out["frames"] = P(rules.dp, None, None)
+    return out
+
+
+def abstract_cache(cfg: ModelConfig, shape: ShapeCfg, rules=None,
+                   msize: int = 1, mesh=None):
+    """SDS pytree of the decode cache: eval_shape of a same-batch prefill
+    with cache_len = shape.seq_len."""
+    params = api.abstract_params(cfg)
+    pre_shape = ShapeCfg(shape.name, shape.seq_len, shape.global_batch,
+                         "prefill")
+    batch = input_specs(cfg, pre_shape)
+    if cfg.family == "audio":
+        batch["frames"] = jax.ShapeDtypeStruct(
+            (shape.global_batch, cfg.n_frames, cfg.d_model),
+            jnp.dtype(cfg.act_dtype))
+
+    def fn(p, b):
+        _, cache = api.prefill(cfg, p, b, cache_len=shape.seq_len)
+        return cache
+
+    return jax.eval_shape(fn, params, batch)
+
+
+def cache_spec_tree(cfg: ModelConfig, cache_sds, rules: Rules,
+                    msize: int = 16, dsize: int = 16,
+                    seq_2d: bool = False):
+    """PartitionSpecs for the decode cache.
+
+    KV tensors [..., B, S, H, dh] are sequence-sharded over the model axis
+    (decode attention reductions become psums); recurrent states are
+    batch-sharded; dims that do not divide the axis (long_500k batch=1,
+    whisper's 1500-frame cross cache) stay replicated.  ``seq_2d``: when the
+    batch cannot use the data axes (long_500k batch=1), shard the sequence
+    over (data x model) jointly.
+    """
+    def spec_for(path_key: str, leaf):
+        nd = len(leaf.shape)
+        if path_key.startswith(("k", "v")) and nd >= 5:
+            # [L(or G), B, S, H, dh] or [G, per, B, S, H, dh]
+            base = [None] * nd
+            if rules.dp is not None and leaf.shape[nd - 4] % dsize == 0:
+                base[nd - 4] = rules.dp
+            seq_axes = rules.tp
+            if seq_2d and rules.dp is None and \
+                    leaf.shape[nd - 3] % (dsize * msize) == 0:
+                seq_axes = tuple(rules.data_axes) + (rules.model_axis,)
+            if leaf.shape[nd - 3] % msize == 0:
+                base[nd - 3] = seq_axes
+            return P(*base)
+        # recurrent states [L, B, ...]
+        base = [None] * nd
+        if nd >= 2 and rules.dp is not None and leaf.shape[1] % dsize == 0:
+            base[1] = rules.dp
+        return P(*base)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_sds)
+    specs = []
+    for path, leaf in flat:
+        key = str(getattr(path[0], "key", ""))
+        specs.append(spec_for(key, leaf))
+    return jax.tree_util.tree_unflatten(treedef, specs)

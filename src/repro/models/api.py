@@ -1,0 +1,178 @@
+"""Unified model API: every architecture exposes the same three entry points.
+
+    init_params(cfg, key)                                   -> params pytree
+    train_loss(cfg, params, batch)                          -> scalar
+    prefill(cfg, params, batch, cache_len)                  -> (logits, cache)
+    decode_step(cfg, params, batch, cache, pos)             -> (logits, cache)
+
+``batch`` is the dict produced by ``launch.shapes.input_specs`` — tokens plus
+any stub modality inputs (frames / image embeddings).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import Rules
+from .config import ModelConfig
+from . import transformer, rwkv6, zamba2, vision, whisper
+from .layers import rms_norm
+from .transformer import chunked_ce_loss
+from .mamba2 import CONV_W
+
+
+def _ce_from_hidden(cfg, params, hidden, targets, rules):
+    head = params["head"] if "head" in params else params["embed"].T
+    return chunked_ce_loss(cfg, hidden, head, targets, rules)
+
+
+def _logits_last(cfg, params, hidden, rules):
+    head = params["head"] if "head" in params else params["embed"].T
+    x = hidden[:, -1] if hidden.ndim == 3 else hidden
+    return (x @ head).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 full model
+# ---------------------------------------------------------------------------
+
+def _rwkv_init(cfg, key):
+    dt = jnp.dtype(cfg.param_dtype)
+    keys = jax.random.split(key, cfg.n_layers + 3)
+    blocks = [rwkv6.rwkv_block_params(cfg, keys[i], dt)
+              for i in range(cfg.n_layers)]
+    return {
+        "embed": jax.random.normal(keys[-1], (cfg.vocab, cfg.d_model),
+                                   jnp.float32).astype(dt) * 0.02,
+        "blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *blocks),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+        "head": jax.random.normal(keys[-2], (cfg.d_model, cfg.vocab),
+                                  jnp.float32).astype(dt) * 0.02,
+    }
+
+
+def _rwkv_backbone(cfg, params, tokens, rules, state=None, collect=False):
+    b, t = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(
+        jnp.dtype(cfg.act_dtype))
+    hs = cfg.rwkv_head_size
+    nh = cfg.d_model // hs
+    decode = state is not None
+
+    def body(h, layer):
+        bp, st = layer
+        h2, st_new = rwkv6.rwkv_block(cfg, bp, h, rules=rules,
+                                      state=st if decode else None,
+                                      use_chunked=not decode)
+        return h2, st_new
+
+    if cfg.remat and not decode:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    if decode:
+        xs = (params["blocks"], state)
+    else:
+        dummy = (jnp.zeros((cfg.n_layers, b, nh, hs, hs), x.dtype),
+                 jnp.zeros((cfg.n_layers, b, cfg.d_model), x.dtype),
+                 jnp.zeros((cfg.n_layers, b, cfg.d_model), x.dtype))
+        xs = (params["blocks"], dummy)
+    x, new_state = jax.lax.scan(body, x, xs)
+    return rms_norm(x, params["final_norm"], cfg.norm_eps), new_state
+
+
+# ---------------------------------------------------------------------------
+# dispatch table
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key):
+    if cfg.family == "rwkv":
+        return _rwkv_init(cfg, key)
+    if cfg.family == "hybrid":
+        return zamba2.init_params(cfg, key)
+    if cfg.family == "vlm":
+        return vision.init_params(cfg, key)
+    if cfg.family == "audio":
+        return whisper.init_params(cfg, key)
+    return transformer.init_params(cfg, key)
+
+
+def abstract_params(cfg: ModelConfig):
+    """ShapeDtypeStructs of the param pytree (dry-run; no allocation)."""
+    return jax.eval_shape(lambda k: init_params(cfg, k),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def train_loss(cfg: ModelConfig, params, batch: Dict[str, Any],
+               rules: Optional[Rules] = None, msize: int = 1, mesh=None):
+    tokens = batch["tokens"]
+    if cfg.family == "rwkv":
+        hid, _ = _rwkv_backbone(cfg, params, tokens[:, :-1], rules)
+        return _ce_from_hidden(cfg, params, hid, tokens[:, 1:], rules)
+    if cfg.family == "hybrid":
+        hid, _ = zamba2.forward(cfg, params, tokens[:, :-1], rules=rules,
+                                msize=msize, mesh=mesh, mode="train")
+        return _ce_from_hidden(cfg, params, hid, tokens[:, 1:], rules)
+    if cfg.family == "vlm":
+        hid, _ = vision.forward(cfg, params, tokens[:, :-1],
+                                batch["img_embed"], rules=rules, msize=msize,
+                                mesh=mesh, mode="train")
+        return _ce_from_hidden(cfg, params, hid, tokens[:, 1:], rules)
+    if cfg.family == "audio":
+        hid, _ = whisper.forward(cfg, params, tokens[:, :-1],
+                                 batch["frames"], rules=rules, msize=msize,
+                                 mesh=mesh, mode="train")
+        return _ce_from_hidden(cfg, params, hid, tokens[:, 1:], rules)
+    return transformer.train_loss(cfg, params, tokens, rules, msize, mesh)
+
+
+def prefill(cfg: ModelConfig, params, batch, rules=None, msize: int = 1,
+            mesh=None, cache_len: Optional[int] = None):
+    tokens = batch["tokens"]
+    if cfg.family == "rwkv":
+        hid, state = _rwkv_backbone(cfg, params, tokens, rules)
+        return _logits_last(cfg, params, hid, rules), {"state": state}
+    if cfg.family == "hybrid":
+        hid, cache = zamba2.forward(cfg, params, tokens, rules=rules,
+                                    msize=msize, mesh=mesh, mode="prefill",
+                                    cache_len=cache_len)
+        return _logits_last(cfg, params, hid, rules), cache
+    if cfg.family == "vlm":
+        hid, cache = vision.forward(cfg, params, tokens, batch["img_embed"],
+                                    rules=rules, msize=msize, mesh=mesh,
+                                    mode="prefill", cache_len=cache_len)
+        return _logits_last(cfg, params, hid, rules), cache
+    if cfg.family == "audio":
+        hid, cache = whisper.forward(cfg, params, tokens, batch["frames"],
+                                     rules=rules, msize=msize, mesh=mesh,
+                                     mode="prefill", cache_len=cache_len)
+        return _logits_last(cfg, params, hid, rules), cache
+    return transformer.prefill(cfg, params, tokens, rules, msize, mesh,
+                               cache_len=cache_len)
+
+
+def decode_step(cfg: ModelConfig, params, batch, cache, pos,
+                rules=None, msize: int = 1, mesh=None):
+    token = batch["tokens"]
+    if cfg.family == "rwkv":
+        hid, state = _rwkv_backbone(cfg, params, token, rules,
+                                    state=cache["state"])
+        return _logits_last(cfg, params, hid, rules), {"state": state}
+    if cfg.family == "hybrid":
+        hid, cache = zamba2.forward(cfg, params, token, rules=rules,
+                                    msize=msize, mesh=mesh, mode="decode",
+                                    cache=cache, pos=pos)
+        return _logits_last(cfg, params, hid, rules), cache
+    if cfg.family == "vlm":
+        hid, cache = vision.forward(cfg, params, token, batch["img_embed"],
+                                    rules=rules, msize=msize, mesh=mesh,
+                                    mode="decode", cache=cache, pos=pos)
+        return _logits_last(cfg, params, hid, rules), cache
+    if cfg.family == "audio":
+        hid, cache = whisper.forward(cfg, params, token, None, rules=rules,
+                                     msize=msize, mesh=mesh, mode="decode",
+                                     cache=cache, pos=pos)
+        return _logits_last(cfg, params, hid, rules), cache
+    return transformer.decode_step(cfg, params, token, cache, pos, rules,
+                                   msize, mesh)

@@ -1,0 +1,77 @@
+"""H² token-mixing layer: the paper's operator as a first-class LM module.
+
+The paper's domain is kernel matrices over point sets; softmax attention is
+data-dependent and outside its scope (DESIGN.md §4).  What *does* transfer is
+a fixed non-local positional operator: tokens live on the 1-D grid
+``0..S-1``, a smooth kernel (exponential / fractional-diffusion) defines an
+S x S mixing matrix, and the H² machinery applies it in O(S) instead of
+O(S²) — the feature axis rides along as the paper's multi-vector ``nv``.
+
+    y[b, :, d] = A_h2 @ x[b, :, d]        A = kernel(|i - j| / S)
+
+Use cases: long-context positional smoothing / state-mixing experiments, and
+a concrete demonstration that the H² core composes with the LM substrate
+(same mesh, same sharding rules: the mixing matvec shards its block rows
+over the model axis, which for a seq-sharded residual is a *local* op).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.clustering import build_cluster_tree
+from repro.core.construction import construct_h2
+from repro.core.compression import compress
+from repro.core.matvec import h2_matvec
+from repro.core.structure import H2Data, H2Shape
+from .layers import dense_init, rms_norm
+
+
+def h2mixer_structure(seq_len: int, leaf_size: int = 32, cheb_p: int = 4,
+                      eta: float = 0.9, corr: float = 0.05,
+                      tol: Optional[float] = 1e-4,
+                      dtype=jnp.float32) -> Tuple[H2Shape, H2Data]:
+    """Build (and recompress) the H² mixing operator for positions 0..S-1."""
+    pts = (np.arange(seq_len, dtype=np.float64) / seq_len)[:, None]
+
+    def kern(x, y):
+        r = np.linalg.norm(x - y, axis=-1)
+        return np.exp(-r / corr)
+
+    shape, data, tree, _ = construct_h2(pts, kern, leaf_size=leaf_size,
+                                        cheb_p=cheb_p, eta=eta, dtype=dtype)
+    # 1-D tree on sorted points: the permutation is identity, so no
+    # reordering is needed at apply time (asserted here).
+    assert (tree.perm == np.arange(seq_len)).all()
+    if tol is not None:
+        shape, data = compress(shape, data, tol=tol)
+    return shape, data
+
+
+def h2mixer_params(cfg, key, dtype) -> Dict[str, Any]:
+    d = cfg.d_model
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm": jnp.ones((d,), dtype),
+        "w_in": dense_init(k1, (d, d), dtype),
+        "w_out": dense_init(k2, (d, d), dtype, scale=0.02),
+        "gate": jnp.zeros((d,), dtype),
+    }
+
+
+def h2mixer_apply(cfg, p, x: jax.Array, shape: H2Shape, data: H2Data
+                  ) -> jax.Array:
+    """x: [B, S, D] -> x + gated H² positional mix (residual layer)."""
+    b, s, d = x.shape
+    assert s == shape.n, (s, shape.n)
+    h = rms_norm(x, p["norm"], cfg.norm_eps) @ p["w_in"]
+    # tokens-as-points, features-as-multivector: [S, B*D]
+    hv = jnp.moveaxis(h, 1, 0).reshape(s, b * d)
+    mixed = h2_matvec(shape, data, hv.astype(data.u_leaf.dtype))
+    mixed = jnp.moveaxis(mixed.reshape(s, b, d), 0, 1).astype(x.dtype)
+    out = (mixed @ p["w_out"]) * jax.nn.tanh(p["gate"])
+    return x + out

@@ -1,0 +1,389 @@
+"""Shared layer library: norms, RoPE, flash attention, decode attention, MLP.
+
+Pure functions over explicit parameter dicts.  Sharding is expressed with
+``with_sharding_constraint`` (PartitionSpecs from parallel.sharding.Rules);
+constraints are no-ops outside a mesh context, so the same code runs on one
+CPU device in the smoke tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import Rules
+
+
+def _constrain(x, spec):
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, TypeError):
+        return x    # no mesh context (single-device tests)
+
+
+# ---------------------------------------------------------------------------
+# norms / rope / init
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    y = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (y * w.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x, w, b, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = x32.mean(-1, keepdims=True)
+    var = ((x32 - mu) ** 2).mean(-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w + b).astype(dt)
+
+
+def rope_freqs(hd: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """x: [B, S, H, dh]; pos: [S] or [B, S]."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # [hd/2]
+    ang = pos[..., None].astype(jnp.float32) * freqs    # [..., S, hd/2]
+    if ang.ndim == 2:                                    # [S, hd/2]
+        ang = ang[None, :, None, :]
+    else:                                                # [B, S, hd/2]
+        ang = ang[:, :, None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[0] if len(shape) >= 2 else shape[-1]
+    s = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * s).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def attention_params(cfg, key, dtype, cross: bool = False) -> Dict[str, Any]:
+    d, hd = cfg.d_model, cfg.hd
+    keys = jax.random.split(key, 8)
+    p = {
+        "wq": dense_init(keys[0], (d, cfg.n_heads * hd), dtype),
+        "wk": dense_init(keys[1], (d, cfg.n_kv_heads * hd), dtype),
+        "wv": dense_init(keys[2], (d, cfg.n_kv_heads * hd), dtype),
+        "wo": dense_init(keys[3], (cfg.n_heads * hd, d), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), dtype)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def _qkv(cfg, p, x, x_kv=None):
+    """Project to q [B,S,H,dh], k/v [B,Sk,Hkv,dh]."""
+    b, s, _ = x.shape
+    xk = x if x_kv is None else x_kv
+    sk = xk.shape[1]
+    hd = cfg.hd
+    q = x @ p["wq"]
+    k = xk @ p["wk"]
+    v = xk @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, cfg.n_heads, hd)
+    k = k.reshape(b, sk, cfg.n_kv_heads, hd)
+    v = v.reshape(b, sk, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def _q_positions(nq, bq, q_offset):
+    return (q_offset + jax.lax.broadcasted_iota(jnp.int32, (nq, bq), 0) * bq
+            + jax.lax.broadcasted_iota(jnp.int32, (nq, bq), 1))
+
+
+def _flash_core(qb, kb, vb, *, causal: bool, scale: float, sc_spec,
+                q_offset: int = 0):
+    """Forward scan with online softmax.  qb: [b,nq,bq,hkv,g,hd];
+    kb/vb: [nkv,bkv,...] pre-moved.  Returns (out, mx, den)."""
+    nkv, b = kb.shape[0], qb.shape[0]
+    bkv = kb.shape[2]
+    nq, bq, hkv, g, hd = qb.shape[1:]
+    q_pos = _q_positions(nq, bq, q_offset)
+
+    def kv_step(carry, inputs):
+        acc, mx, den = carry
+        kc, vc, j = inputs
+        sc = jnp.einsum("bqthgd,bchd->bqthgc", qb, kc,
+                        preferred_element_type=jnp.float32) * scale
+        if sc_spec is not None:
+            sc = _constrain(sc, sc_spec)
+        if causal:
+            k_pos = j * bkv + jax.lax.broadcasted_iota(jnp.int32, (bkv,), 0)
+            mask = q_pos[:, :, None] >= k_pos[None, None, :]
+            sc = jnp.where(mask[None, :, :, None, None, :], sc, -1e30)
+        new_mx = jnp.maximum(mx, sc.max(axis=-1))
+        corr = jnp.exp(mx - new_mx)
+        p_ = jnp.exp(sc - new_mx[..., None])
+        new_den = den * corr + p_.sum(axis=-1)
+        pv = jnp.einsum("bqthgc,bchd->bqthgd", p_, vc,
+                        preferred_element_type=jnp.float32)
+        new_acc = acc * corr[..., None] + pv
+        return (new_acc, new_mx, new_den), None
+
+    acc0 = jnp.zeros((b, nq, bq, hkv, g, hd), jnp.float32)
+    mx0 = jnp.full((b, nq, bq, hkv, g), -1e30, jnp.float32)
+    den0 = jnp.zeros((b, nq, bq, hkv, g), jnp.float32)
+    (acc, mx, den), _ = jax.lax.scan(kv_step, (acc0, mx0, den0),
+                                     (kb, vb, jnp.arange(nkv)))
+    out = acc / jnp.maximum(den[..., None], 1e-30)
+    return out, mx, den
+
+
+def _flash_bwd_scan(qb, kb, vb, out, mx, den, dout, *, causal, scale,
+                    sc_spec, q_offset: int = 0):
+    """Flash backward: recompute score tiles per kv block (no O(S^2) saves).
+
+    With normalized probs p = exp(sc - mx)/den:
+      dv_j = p^T dout
+      ds   = p * (dout . v_j - sum(dout * out))      (softmax jacobian)
+      dq  += ds k_j * scale ;   dk_j = ds^T q * scale
+    """
+    nkv = kb.shape[0]
+    bkv = kb.shape[2]
+    nq, bq = qb.shape[1], qb.shape[2]
+    q_pos = _q_positions(nq, bq, q_offset)
+    dterm = (dout * out).sum(axis=-1)                    # [b,nq,bq,hkv,g]
+
+    def kv_step(dq, inputs):
+        kc, vc, j = inputs
+        sc = jnp.einsum("bqthgd,bchd->bqthgc", qb, kc,
+                        preferred_element_type=jnp.float32) * scale
+        if sc_spec is not None:
+            sc = _constrain(sc, sc_spec)
+        if causal:
+            k_pos = j * bkv + jax.lax.broadcasted_iota(jnp.int32, (bkv,), 0)
+            mask = q_pos[:, :, None] >= k_pos[None, None, :]
+            sc = jnp.where(mask[None, :, :, None, None, :], sc, -1e30)
+        p = jnp.exp(sc - mx[..., None]) / \
+            jnp.maximum(den[..., None], 1e-30)           # [b,q,t,h,g,c]
+        dv = jnp.einsum("bqthgc,bqthgd->bchd", p, dout)
+        dp = jnp.einsum("bqthgd,bchd->bqthgc", dout, vc,
+                        preferred_element_type=jnp.float32)
+        ds = p * (dp - dterm[..., None])
+        if sc_spec is not None:
+            ds = _constrain(ds, sc_spec)
+        dq = dq + jnp.einsum("bqthgc,bchd->bqthgd", ds, kc) * scale
+        dk = jnp.einsum("bqthgc,bqthgd->bchd", ds, qb) * scale
+        return dq, (dk, dv)
+
+    dq0 = jnp.zeros(qb.shape, jnp.float32)
+    dq, (dk, dv) = jax.lax.scan(kv_step, dq0,
+                                (kb, vb, jnp.arange(nkv)))
+    return dq, dk, dv
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool, q_offset: int = 0,
+                    block_q: int = 512, block_kv: int = 1024,
+                    rules: Optional[Rules] = None,
+                    model_size: int = 1) -> jax.Array:
+    """Memory-efficient attention: online softmax over KV blocks, with a
+    custom VJP that recomputes score tiles in the backward pass (plain AD of
+    the forward scan would stash every per-step score tile — O(S^2) memory
+    per layer; see EXPERIMENTS.md §Perf iteration 'flash-bwd').
+
+    Query blocks form a leading batch dim so that, when head count does not
+    divide the TP axis, the query-block dim is sharded instead (context
+    parallelism on queries).  q: [B,S,H,dh], k/v: [B,Sk,Hkv,dh].
+    """
+    b, s, h, hd = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    bq = min(block_q, s)
+    bkv = min(block_kv, sk)
+    nq, nkv = s // bq, sk // bkv
+    if s % bq:
+        nq, bq = 1, s
+    if sk % bkv:
+        nkv, bkv = 1, sk
+    # context-parallel mode: the query-block dim is sharded over the model
+    # axis, so it must divide evenly (kv stays replicated — GQA keeps it small)
+    if rules is not None and not (rules.attn_tp and hkv % model_size == 0) \
+            and model_size > 1:
+        if s % model_size == 0:
+            nq = model_size * max(1, s // (bq * model_size))
+            bq = s // nq
+        else:
+            nq, bq = 1, s
+    scale = 1.0 / np.sqrt(hd)
+
+    qb = q.reshape(b, nq, bq, hkv, g, hd)
+    if rules is not None and model_size > 1:
+        if rules.attn_tp and hkv % model_size == 0:
+            qb = _constrain(qb, P(rules.dp, None, None, rules.tp, None, None))
+        elif nq % model_size == 0:
+            qb = _constrain(qb, P(rules.dp, rules.tp, None, None, None, None))
+    kb = k.reshape(b, nkv, bkv, hkv, hd)
+    vb = v.reshape(b, nkv, bkv, hkv, hd)
+
+    # the score tile's sharding must survive into the AD transpose, or SPMD
+    # replicates a [*, nq, bq, hkv, g, bkv] tensor per block (see DESIGN.md)
+    sc_spec = None
+    if rules is not None and model_size > 1:
+        if rules.attn_tp and hkv % model_size == 0:
+            sc_spec = P(rules.dp, None, None, rules.tp, None, None)
+        elif nq % model_size == 0:
+            sc_spec = P(rules.dp, rules.tp, None, None, None, None)
+
+    ks = jnp.moveaxis(kb, 1, 0)
+    vs = jnp.moveaxis(vb, 1, 0)
+
+    @jax.custom_vjp
+    def _attend(qb_, ks_, vs_):
+        out, _, _ = _flash_core(qb_, ks_, vs_, causal=causal, scale=scale,
+                                sc_spec=sc_spec, q_offset=q_offset)
+        return out
+
+    def _attend_fwd(qb_, ks_, vs_):
+        out, mx, den = _flash_core(qb_, ks_, vs_, causal=causal, scale=scale,
+                                   sc_spec=sc_spec, q_offset=q_offset)
+        return out, (qb_, ks_, vs_, out, mx, den)
+
+    def _attend_bwd(res, dout):
+        qb_, ks_, vs_, out, mx, den = res
+        dq, dk, dv = _flash_bwd_scan(qb_, ks_, vs_, out, mx, den,
+                                     dout.astype(jnp.float32), causal=causal,
+                                     scale=scale, sc_spec=sc_spec,
+                                     q_offset=q_offset)
+        return (dq.astype(qb_.dtype), dk.astype(ks_.dtype),
+                dv.astype(vs_.dtype))
+
+    _attend.defvjp(_attend_fwd, _attend_bwd)
+    out = _attend(qb, ks, vs)
+    return out.reshape(b, s, h, hd).astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     length_mask: jax.Array,
+                     rules: Optional[Rules] = None) -> jax.Array:
+    """One-token attention against a (sequence-sharded) KV cache.
+
+    q: [B,1,H,dh]; caches: [B,S,Hkv,dh] (S sharded over the model axis —
+    softmax/contract reductions over S lower to psums).
+    length_mask: [B, S] bool (True = valid).
+    """
+    b, _, h, hd = q.shape
+    hkv = k_cache.shape[2]
+    g = h // hkv
+    scale = 1.0 / np.sqrt(hd)
+    qh = q.reshape(b, hkv, g, hd)
+    sc = jnp.einsum("bhgd,bshd->bhgs", qh, k_cache,
+                    preferred_element_type=jnp.float32) * scale
+    sc = jnp.where(length_mask[:, None, None, :], sc, -1e30)
+    if rules is not None:
+        sc = _constrain(sc, P(rules.dp, None, None, rules.decode_seq))
+    p_ = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p_, v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+def attention(cfg, p, x, *, rules: Optional[Rules] = None,
+              model_size: int = 1, causal: bool = True,
+              x_kv: Optional[jax.Array] = None,
+              rope: bool = True,
+              cache: Optional[Tuple[jax.Array, jax.Array]] = None,
+              pos: Optional[jax.Array] = None,
+              static_cache: bool = False):
+    """Full attention sub-layer.  Returns (out [B,S,D], new_cache or None).
+
+    Modes:
+      - train/prefill: cache is None -> flash attention; the new k/v are
+        returned as the cache.
+      - decode: cache=(k,v) with static length S; ``pos`` is the scalar write
+        position; returns updated cache.
+      - decode cross-attention: ``static_cache=True`` — attend to a fixed
+        cache (image/audio K/V), nothing appended.
+    """
+    b, s, _ = x.shape
+    q, k, v = _qkv(cfg, p, x, x_kv)
+    new_cache = None
+    if cache is not None and static_cache:
+        kc, vc = cache
+        valid = jnp.ones((b, kc.shape[1]), bool)
+        out = decode_attention(q, kc, vc, valid, rules)
+        new_cache = cache
+    elif cache is None:
+        if rope and x_kv is None:
+            pid = jnp.arange(s) if pos is None else pos
+            q = apply_rope(q, pid, cfg.rope_theta)
+            k = apply_rope(k, pid, cfg.rope_theta)
+        out = flash_attention(
+            q, k, v, causal=causal and x_kv is None,
+            block_q=cfg.flash_block_q, block_kv=cfg.flash_block_kv,
+            rules=rules, model_size=model_size)
+        new_cache = (k, v)
+    else:                      # self-attention decode: append to cache
+        kc, vc = cache
+        sk = kc.shape[1]
+        if rope:
+            q = apply_rope(q, pos[None] if pos.ndim == 0 else pos,
+                           cfg.rope_theta)
+            k = apply_rope(k, pos[None] if pos.ndim == 0 else pos,
+                           cfg.rope_theta)
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k, pos, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v, pos, axis=1)
+        if rules is not None:
+            kc = _constrain(kc, rules.kv_cache_decode())
+            vc = _constrain(vc, rules.kv_cache_decode())
+        valid = jnp.arange(sk)[None, :] <= pos
+        valid = jnp.broadcast_to(valid, (b, sk))
+        out = decode_attention(q, kc, vc, valid, rules)
+        new_cache = (kc, vc)
+    out = out.reshape(b, s, cfg.n_heads * cfg.hd)
+    return out @ p["wo"], new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp_params(cfg, key, dtype) -> Dict[str, Any]:
+    d, f = cfg.d_model, cfg.d_ff
+    keys = jax.random.split(key, 3)
+    if cfg.act == "swiglu":
+        return {"w1": dense_init(keys[0], (d, f), dtype),
+                "w3": dense_init(keys[1], (d, f), dtype),
+                "w2": dense_init(keys[2], (f, d), dtype)}
+    return {"w1": dense_init(keys[0], (d, f), dtype),
+            "w2": dense_init(keys[1], (f, d), dtype)}
+
+
+def mlp(cfg, p, x, rules: Optional[Rules] = None):
+    h = x @ p["w1"]
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(h) * (x @ p["w3"])
+    elif cfg.act == "sq_relu":            # nemotron squared ReLU
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        h = jax.nn.gelu(h)
+    if rules is not None:
+        h = _constrain(h, P(rules.dp, None, rules.tp))
+    return h @ p["w2"]

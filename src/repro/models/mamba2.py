@@ -1,0 +1,156 @@
+"""Mamba2 (SSD) block — the zamba2 backbone.
+
+State-space duality form: per head (head dim P=64, state N=ssm_state):
+    S_t = a_t * S_{t-1} + x_t (x) B_t          (a_t scalar per head)
+    y_t = S_t C_t + D_skip * x_t
+with a_t = exp(-exp(A_log) * dt_t), dt = softplus(dt_raw + dt_bias), and a
+causal depthwise conv (width 4) on the (x, B, C) stream.
+
+``ssd_scan`` is the recurrence reference (and the O(1)-state decode path);
+``ssd_chunked`` is the chunk-parallel training path (scalar per-head decays
+make it simpler than the RWKV6 per-channel case).  Tested allclose.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .layers import _constrain, dense_init, rms_norm
+
+CONV_W = 4
+
+
+def mamba_params(cfg, key, dtype) -> Dict[str, Any]:
+    d = cfg.d_model
+    d_in = 2 * d
+    n = cfg.ssm_state
+    hd = cfg.mamba_head_dim
+    nh = d_in // hd
+    conv_ch = d_in + 2 * n
+    keys = jax.random.split(key, 6)
+    return {
+        "norm": jnp.ones((d,), dtype),
+        "in_proj": dense_init(keys[0], (d, 2 * d_in + 2 * n + nh), dtype),
+        "conv_w": dense_init(keys[1], (CONV_W, conv_ch), dtype, scale=0.5),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "a_log": jnp.zeros((nh,), dtype),
+        "dt_bias": jnp.zeros((nh,), dtype),
+        "d_skip": jnp.ones((nh,), dtype),
+        "out_norm": jnp.ones((d_in,), dtype),
+        "out_proj": dense_init(keys[2], (d_in, d), dtype),
+    }
+
+
+def _causal_conv(x, w, b, carry: Optional[jax.Array] = None):
+    """Depthwise causal conv, width CONV_W.  x: [B,T,C]; carry: [B,W-1,C]
+    (previous inputs, for decode).  Returns (y, new_carry)."""
+    if carry is None:
+        pad = jnp.zeros((x.shape[0], CONV_W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = carry
+    xp = jnp.concatenate([pad, x], axis=1)               # [B, T+W-1, C]
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(CONV_W)) + b
+    return jax.nn.silu(y), xp[:, -(CONV_W - 1):]
+
+
+def ssd_scan(x, b_in, c_in, a, d_skip, state0):
+    """x: [B,T,H,P]; b_in/c_in: [B,T,N]; a: [B,T,H]; state0: [B,H,P,N]."""
+    def step(s, inp):
+        xt, bt, ct, at = inp
+        s = at[..., None, None] * s + jnp.einsum("bhp,bn->bhpn", xt, bt)
+        y = jnp.einsum("bhpn,bn->bhp", s, ct)
+        return s, y
+
+    xs = jnp.moveaxis(x, 1, 0).astype(jnp.float32)
+    bs = jnp.moveaxis(b_in, 1, 0).astype(jnp.float32)
+    cs = jnp.moveaxis(c_in, 1, 0).astype(jnp.float32)
+    as_ = jnp.moveaxis(a, 1, 0).astype(jnp.float32)
+    state, ys = jax.lax.scan(step, state0.astype(jnp.float32),
+                             (xs, bs, cs, as_))
+    y = jnp.moveaxis(ys, 0, 1) + d_skip[None, None, :, None] * x
+    return y.astype(x.dtype), state.astype(x.dtype)
+
+
+def ssd_chunked(x, b_in, c_in, a, d_skip, state0, chunk: int = 64):
+    """Chunk-parallel SSD; matches ssd_scan."""
+    b, t, h, p = x.shape
+    n = b_in.shape[-1]
+    if t % chunk:
+        chunk = t
+    nc = t // chunk
+    xc = x.reshape(b, nc, chunk, h, p).astype(jnp.float32)
+    bc = b_in.reshape(b, nc, chunk, n).astype(jnp.float32)
+    cc = c_in.reshape(b, nc, chunk, n).astype(jnp.float32)
+    la = jnp.log(jnp.maximum(a.reshape(b, nc, chunk, h), 1e-20)
+                 ).astype(jnp.float32)
+    lcum = jnp.cumsum(la, axis=2)                        # inclusive
+    ltot = lcum[:, :, -1]                                # [b,nc,h]
+
+    # intra: y_t = sum_{s<=t} e^{L_t - L_s} (C_t.B_s) x_s
+    dec = lcum[:, :, :, None, :] - lcum[:, :, None, :, :]   # [b,c,t,s,h]
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))          # inclusive
+    dec = jnp.where(tri[None, None, :, :, None], dec, -jnp.inf)
+    cb = jnp.einsum("bctn,bcsn->bcts", cc, bc)
+    att = jnp.exp(dec) * cb[..., None]                      # [b,c,t,s,h]
+    intra = jnp.einsum("bctsh,bcshp->bcthp", att, xc)
+
+    # inter-chunk carried state; C_t e^{L_t}: [b,c,t,h,n]
+    q_dec = jnp.exp(lcum)[..., None] * cc[:, :, :, None, :]
+    k_end = jnp.exp(ltot[:, :, None] - lcum)[..., None] * \
+        bc[:, :, :, None, :]                                  # [b,c,t,h,n]
+
+    def chunk_step(s, inp):
+        qd, ke, xcc, lt = inp
+        inter = jnp.einsum("bthn,bhpn->bthp", qd, s)
+        snew = jnp.einsum("bthp,bthn->bhpn", xcc, ke)
+        s = jnp.exp(lt)[..., None, None] * s + snew
+        return s, inter
+
+    # checkpoint the body: AD-of-scan then saves only the carried state per
+    # chunk instead of every intermediate (see EXPERIMENTS.md §Perf)
+    chunk_step = jax.checkpoint(
+        chunk_step, policy=jax.checkpoint_policies.nothing_saveable)
+    state, inter = jax.lax.scan(
+        chunk_step, state0.astype(jnp.float32),
+        (jnp.moveaxis(q_dec, 1, 0), jnp.moveaxis(k_end, 1, 0),
+         jnp.moveaxis(xc, 1, 0), jnp.moveaxis(ltot, 1, 0)))
+    inter = jnp.moveaxis(inter, 0, 1)
+    y = (intra + inter).reshape(b, t, h, p) + \
+        d_skip[None, None, :, None] * x.astype(jnp.float32)
+    return y.astype(x.dtype), state.astype(x.dtype)
+
+
+def mamba_block(cfg, p, x, *, rules=None, state=None, use_chunked=True):
+    """x: [B,T,D].  state = (ssm [B,H,P,N], conv [B,W-1,C]) or None.
+    Returns (x, new_state)."""
+    bsz, t, d = x.shape
+    d_in = 2 * d
+    n = cfg.ssm_state
+    hd = cfg.mamba_head_dim
+    nh = d_in // hd
+    ssm_s, conv_s = state if state is not None else (None, None)
+
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    zxbcdt = h @ p["in_proj"]
+    z, xbc, dt = jnp.split(zxbcdt, [d_in, 2 * d_in + 2 * n], axis=-1)
+    xbc, conv_s = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_s)
+    xc, b_in, c_in = jnp.split(xbc, [d_in, d_in + n], axis=-1)
+    if rules is not None:
+        z = _constrain(z, P(rules.dp, None, rules.tp))
+        xc = _constrain(xc, P(rules.dp, None, rules.tp))
+    dt_ = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B,T,H]
+    a = jnp.exp(-jnp.exp(p["a_log"].astype(jnp.float32)) * dt_)
+    xh = (xc * dt_.repeat(hd, axis=-1)).reshape(bsz, t, nh, hd)
+    if ssm_s is None:
+        ssm_s = jnp.zeros((bsz, nh, hd, n), x.dtype)
+    if t == 1 or not use_chunked:
+        y, ssm_s = ssd_scan(xh, b_in, c_in, a, p["d_skip"], ssm_s)
+    else:
+        y, ssm_s = ssd_chunked(xh, b_in, c_in, a, p["d_skip"], ssm_s)
+    y = y.reshape(bsz, t, d_in)
+    y = (rms_norm(y, p["out_norm"], cfg.norm_eps) *
+         jax.nn.silu(z)).astype(x.dtype)
+    return x + y @ p["out_proj"], (ssm_s.astype(x.dtype), conv_s)

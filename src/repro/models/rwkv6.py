@@ -1,0 +1,204 @@
+"""RWKV6 "Finch" (arXiv:2404.05892): attention-free LM with data-dependent
+per-channel decay.
+
+Time-mix per head (head size 64): with receptance r, key k, value v, decay
+w_t (data-dependent, per channel) and bonus u:
+
+    o_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+
+Two equivalent implementations, tested allclose:
+  * ``wkv_scan``    — the recurrence via lax.scan (reference; O(1)-state decode)
+  * ``wkv_chunked`` — chunk-parallel form (log-space cumulative decays inside
+    a chunk + carried inter-chunk state), the TPU-friendly training path —
+    the same restructure-for-parallel-hardware move the paper applies to its
+    tree sweeps.  Decays are clamped so within-chunk log-decay sums stay in
+    f32 exp range (documented in DESIGN.md).
+
+Simplifications vs the full Finch block (DESIGN.md §Arch-applicability): the
+five token-shift mixes use per-channel learned mu (no LoRA on the mix), and
+the decay projection is a single tanh-LoRA.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import Rules
+from .layers import _constrain, dense_init, rms_norm
+
+_WL_MAX = 1.2          # clamp on pre-decay so chunk-16 stays in f32 range
+
+
+def rwkv_block_params(cfg, key, dtype) -> Dict[str, Any]:
+    d = cfg.d_model
+    hs = cfg.rwkv_head_size
+    nh = d // hs
+    keys = jax.random.split(key, 12)
+    lora = max(32, d // 64)
+    return {
+        "norm1": jnp.ones((d,), dtype),
+        "norm2": jnp.ones((d,), dtype),
+        "mu_r": jnp.full((d,), 0.5, dtype),
+        "mu_k": jnp.full((d,), 0.5, dtype),
+        "mu_v": jnp.full((d,), 0.5, dtype),
+        "mu_w": jnp.full((d,), 0.5, dtype),
+        "mu_g": jnp.full((d,), 0.5, dtype),
+        "r_proj": dense_init(keys[0], (d, d), dtype),
+        "k_proj": dense_init(keys[1], (d, d), dtype),
+        "v_proj": dense_init(keys[2], (d, d), dtype),
+        "g_proj": dense_init(keys[3], (d, d), dtype),
+        "o_proj": dense_init(keys[4], (d, d), dtype),
+        "w_lora_a": dense_init(keys[5], (d, lora), dtype),
+        "w_lora_b": dense_init(keys[6], (lora, d), dtype, scale=0.01),
+        "w_bias": jnp.full((d,), -6.0, dtype),
+        "u_bonus": dense_init(keys[7], (nh, hs), dtype, scale=0.5),
+        "ln_x": jnp.ones((d,), dtype),
+        # channel mix
+        "mu_ck": jnp.full((d,), 0.5, dtype),
+        "cm_k": dense_init(keys[8], (d, cfg.d_ff), dtype),
+        "cm_v": dense_init(keys[9], (cfg.d_ff, d), dtype),
+        "cm_r": dense_init(keys[10], (d, d), dtype),
+    }
+
+
+def _token_shift(x, mu, last: Optional[jax.Array] = None):
+    """lerp(x_{t-1}, x_t, mu); ``last`` is the carried previous token."""
+    if last is None:
+        prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        prev = last[:, None, :]
+    return prev + mu * (x - prev)
+
+
+def wkv_scan(r, k, v, w, u, state0):
+    """Reference recurrence.  r/k/v/w: [B,T,H,N]; u: [H,N];
+    state0: [B,H,N,N].  Returns (out [B,T,H,N], state)."""
+    def step(s, inp):
+        rt, kt, vt, wt = inp                              # [B,H,N]
+        a = jnp.einsum("bhi,bhj->bhij", kt, vt)           # k v^T
+        o = jnp.einsum("bhi,bhij->bhj", rt,
+                       s + u[None, :, :, None] * a)
+        s = wt[..., None] * s + a
+        return s, o
+
+    rs, ks, vs, ws = (jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    state, out = jax.lax.scan(step, state0.astype(jnp.float32),
+                              (rs.astype(jnp.float32), ks.astype(jnp.float32),
+                               vs.astype(jnp.float32), ws.astype(jnp.float32)))
+    return jnp.moveaxis(out, 0, 1).astype(r.dtype), state.astype(r.dtype)
+
+
+def wkv_chunked(r, k, v, w, u, state0, chunk: int = 16):
+    """Chunk-parallel wkv (allclose to wkv_scan).
+
+    With within-chunk cumulative log decay L_t = sum_{s<=t} log w_s:
+      intra: o_t  = sum_{s<t} (r_t e^{L_{t-1}} . k_s e^{-L_s}) v_s
+                    + (r_t . u k_t) v_t
+      inter: o_t += (r_t e^{L_{t-1}}) @ S_in
+      state: S_out = e^{L_C} S_in + sum_s (k_s e^{L_C - L_s}) v_s^T
+    All exponents are causal differences (<= 0) up to the factorization; the
+    decay clamp keeps |L| within f32 exp range for chunk<=16.
+    """
+    b, t, h, n = r.shape
+    if t % chunk:
+        chunk = t
+    nc = t // chunk
+
+    def resh(x):
+        return x.reshape(b, nc, chunk, h, n).astype(jnp.float32)
+
+    rc, kc, vc = resh(r), resh(k), resh(v)
+    logw = jnp.log(jnp.maximum(resh(w), 1e-20))
+    lcum = jnp.cumsum(logw, axis=2)                      # inclusive L_t
+    ltot = lcum[:, :, -1]                                # [b,nc,h,n]
+    lprev = lcum - logw                                  # L_{t-1}
+
+    q_dec = rc * jnp.exp(lprev)                          # r_t e^{L_{t-1}}
+    k_dec = kc * jnp.exp(-lcum)                          # k_s e^{-L_s}
+    att = jnp.einsum("bcthn,bcshn->bcths", q_dec, k_dec)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool), -1)   # strict causal
+    att = jnp.where(tri[None, None, :, None, :], att, 0.0)
+    intra = jnp.einsum("bcths,bcshn->bcthn", att, vc)
+    bonus = jnp.einsum("bcthn,hn,bcthn->bcth", rc, u.astype(jnp.float32),
+                       kc)[..., None] * vc
+
+    k_end = kc * jnp.exp(ltot[:, :, None] - lcum)        # e^{L_C - L_s} k_s
+
+    def chunk_step(s, inp):
+        qd, ke, vcc, lt = inp
+        inter = jnp.einsum("bthn,bhnm->bthm", qd, s)
+        a = jnp.einsum("bthn,bthm->bhnm", ke, vcc)
+        s = jnp.exp(lt)[..., None] * s + a
+        return s, inter
+
+    chunk_step = jax.checkpoint(
+        chunk_step, policy=jax.checkpoint_policies.nothing_saveable)
+    state, inter = jax.lax.scan(
+        chunk_step, state0.astype(jnp.float32),
+        (jnp.moveaxis(q_dec, 1, 0), jnp.moveaxis(k_end, 1, 0),
+         jnp.moveaxis(vc, 1, 0), jnp.moveaxis(ltot, 1, 0)))
+    inter = jnp.moveaxis(inter, 0, 1)
+    out = (intra + bonus + inter).reshape(b, t, h, n)
+    return out.astype(r.dtype), state.astype(r.dtype)
+
+
+def time_mix(cfg, p, x, *, rules=None, state=None, last_tok=None,
+             use_chunked=True):
+    """RWKV6 attention analogue.  x: [B,T,D].
+    state: [B,H,N,N] carried wkv state; last_tok: [B,D] previous token."""
+    b, t, d = x.shape
+    hs = cfg.rwkv_head_size
+    nh = d // hs
+    xr = _token_shift(x, p["mu_r"], last_tok)
+    xk = _token_shift(x, p["mu_k"], last_tok)
+    xv = _token_shift(x, p["mu_v"], last_tok)
+    xw = _token_shift(x, p["mu_w"], last_tok)
+    xg = _token_shift(x, p["mu_g"], last_tok)
+    r = (xr @ p["r_proj"]).reshape(b, t, nh, hs)
+    k = (xk @ p["k_proj"]).reshape(b, t, nh, hs)
+    v = (xv @ p["v_proj"]).reshape(b, t, nh, hs)
+    g = jax.nn.silu(xg @ p["g_proj"])
+    if rules is not None:
+        r = _constrain(r, P(rules.dp, None, rules.tp, None))
+        k = _constrain(k, P(rules.dp, None, rules.tp, None))
+        v = _constrain(v, P(rules.dp, None, rules.tp, None))
+    # data-dependent decay (Finch): w = exp(-exp(wl)), wl clamped (see doc)
+    wl = p["w_bias"] + jnp.tanh(xw @ p["w_lora_a"]) @ p["w_lora_b"]
+    wl = jnp.clip(wl.astype(jnp.float32), -20.0, _WL_MAX)
+    w = jnp.exp(-jnp.exp(wl)).reshape(b, t, nh, hs)
+    u = p["u_bonus"]
+    if state is None:
+        state = jnp.zeros((b, nh, hs, hs), x.dtype)
+    if t == 1 or not use_chunked:
+        out, state = wkv_scan(r, k, v, w, u, state)
+    else:
+        out, state = wkv_chunked(r, k, v, w, u, state)
+    out = out.reshape(b, t, d)
+    out = rms_norm(out, p["ln_x"], cfg.norm_eps) * g
+    return out @ p["o_proj"], state
+
+
+def channel_mix(cfg, p, x, last_tok=None):
+    xk = _token_shift(x, p["mu_ck"], last_tok)
+    h = jnp.square(jax.nn.relu(xk @ p["cm_k"]))
+    rr = jax.nn.sigmoid(x @ p["cm_r"])
+    return rr * (h @ p["cm_v"])
+
+
+def rwkv_block(cfg, p, x, *, rules=None, state=None, use_chunked=True):
+    """One RWKV6 block.  ``state`` is (wkv [B,H,N,N], last1 [B,D], last2 [B,D])
+    for decode, or None for train/prefill.  Returns (x, new_state)."""
+    wkv_s, last1, last2 = state if state is not None else (None, None, None)
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    a, wkv_s = time_mix(cfg, p, h, rules=rules, state=wkv_s,
+                        last_tok=last1, use_chunked=use_chunked)
+    new_last1 = h[:, -1]
+    x = x + a
+    h2 = rms_norm(x, p["norm2"], cfg.norm_eps)
+    x = x + channel_mix(cfg, p, h2, last_tok=last2)
+    new_last2 = h2[:, -1]
+    return x, (wkv_s, new_last1, new_last2)

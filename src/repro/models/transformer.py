@@ -1,0 +1,206 @@
+"""Dense decoder-only transformer (qwen1.5 / nemotron / codeqwen / qwen3
+families) with scan-over-layers, remat, TP/SP sharding and MoE hooks.
+
+Three entry points per the launch contract:
+  train_loss(cfg, params, tokens)                      -> scalar loss
+  prefill(cfg, params, tokens)                         -> (last_logits, cache)
+  decode_step(cfg, params, token, cache, pos)          -> (logits, cache)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import Rules
+from .config import ModelConfig
+from .layers import (_constrain, attention, attention_params, dense_init,
+                     mlp, mlp_params, rms_norm)
+from . import moe as moe_lib
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def block_params(cfg: ModelConfig, key, cross: bool = False) -> Dict[str, Any]:
+    k1, k2, k3 = jax.random.split(key, 3)
+    dt = _dt(cfg)
+    p = {
+        "norm1": jnp.ones((cfg.d_model,), dt),
+        "norm2": jnp.ones((cfg.d_model,), dt),
+        "attn": attention_params(cfg, k1, dt),
+    }
+    if cfg.moe:
+        p["moe"] = moe_lib.moe_params(cfg, k2, dt)
+    else:
+        p["mlp"] = mlp_params(cfg, k2, dt)
+    if cross:
+        p["norm_x"] = jnp.ones((cfg.d_model,), dt)
+        p["xattn"] = attention_params(cfg, k3, dt)
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    dt = _dt(cfg)
+    keys = jax.random.split(key, cfg.n_layers + 3)
+    blocks = [block_params(cfg, keys[i]) for i in range(cfg.n_layers)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+    p = {
+        "embed": dense_init(keys[-1], (cfg.vocab, cfg.d_model), dt, scale=0.02),
+        "blocks": stacked,
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embed:
+        p["head"] = dense_init(keys[-2], (cfg.d_model, cfg.vocab), dt)
+    return p
+
+
+def _ffn(cfg, bp, x, rules, mesh):
+    if cfg.moe:
+        return moe_lib.moe_ffn(cfg, bp["moe"], x, rules, mesh)
+    return mlp(cfg, bp["mlp"], x, rules)
+
+
+def _block(cfg, bp, x, *, rules, msize, mesh, cache=None, pos=None):
+    """Pre-norm transformer block. Returns (x, new_cache)."""
+    h = rms_norm(x, bp["norm1"], cfg.norm_eps)
+    if rules is not None:
+        h = _constrain(h, rules.act_full())
+    a, new_cache = attention(cfg, bp["attn"], h, rules=rules,
+                             model_size=msize, cache=cache, pos=pos)
+    x = x + a
+    if rules is not None:
+        x = _constrain(x, rules.act())
+    h = rms_norm(x, bp["norm2"], cfg.norm_eps)
+    x = x + _ffn(cfg, bp, h, rules, mesh)
+    if rules is not None:
+        x = _constrain(x, rules.act())
+    return x, new_cache
+
+
+def chunked_ce_loss(cfg, hidden, head_w, targets, rules: Optional[Rules]):
+    """Cross-entropy without materializing [B, S, V] logits: scan over
+    sequence chunks (peak memory = chunk x vocab / tp)."""
+    b, s, d = hidden.shape
+    c = min(cfg.loss_chunk, s)
+    if s % c:
+        c = s
+    nchunk = s // c
+    hs = hidden.reshape(b, nchunk, c, d)
+    ts = targets.reshape(b, nchunk, c)
+
+    def step(carry, inp):
+        hc, tc = inp                       # [b, c, d], [b, c]
+        logits = (hc @ head_w).astype(jnp.float32)
+        if rules is not None:
+            logits = _constrain(logits, P(rules.dp, None, rules.tp))
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+        return carry + (lse - gold).sum(), None
+
+    total, _ = jax.lax.scan(step, jnp.zeros((), jnp.float32),
+                            (jnp.moveaxis(hs, 1, 0), jnp.moveaxis(ts, 1, 0)))
+    return total / (b * s)
+
+
+def _backbone_train(cfg, params, x, rules, msize, mesh):
+    """Scan the layer stack (no caches)."""
+    def body(h, bp):
+        h2, _ = _block(cfg, bp, h, rules=rules, msize=msize, mesh=mesh)
+        return h2, None
+
+    if cfg.remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+    else:
+        for i in range(cfg.n_layers):
+            bp = jax.tree.map(lambda a: a[i], params["blocks"])
+            x, _ = body(x, bp)
+    return x
+
+
+def train_loss(cfg: ModelConfig, params, tokens: jax.Array,
+               rules: Optional[Rules] = None, msize: int = 1,
+               mesh=None) -> jax.Array:
+    """Next-token CE over tokens [B, S+1] (targets = tokens shifted)."""
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    x = jnp.take(params["embed"], inp, axis=0).astype(jnp.dtype(cfg.act_dtype))
+    if rules is not None:
+        x = _constrain(x, rules.act())
+    x = _backbone_train(cfg, params, x, rules, msize, mesh)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["head"] if "head" in params else params["embed"].T
+    return chunked_ce_loss(cfg, x, head, tgt, rules)
+
+
+def prefill(cfg: ModelConfig, params, tokens: jax.Array,
+            rules: Optional[Rules] = None, msize: int = 1, mesh=None,
+            cache_len: Optional[int] = None):
+    """Process a full prompt; returns (last-position logits, kv caches).
+
+    The returned cache arrays are [L, B, cache_len, Hkv, dh] (cache_len
+    defaults to the prompt length; pass a larger value to leave room for
+    decode steps).
+    """
+    b, s = tokens.shape
+    cl = cache_len or s
+    x = jnp.take(params["embed"], tokens, axis=0).astype(
+        jnp.dtype(cfg.act_dtype))
+    if rules is not None:
+        x = _constrain(x, rules.act())
+
+    def body(h, bp):
+        h2, kv = _block(cfg, bp, h, rules=rules, msize=msize, mesh=mesh)
+        return h2, kv
+
+    if cfg.remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, (ks, vs) = jax.lax.scan(body, x, params["blocks"])
+    # pad caches to cache_len and (for decode) sequence-shard them
+    if cl > s:
+        pad = [(0, 0), (0, 0), (0, cl - s), (0, 0), (0, 0)]
+        ks = jnp.pad(ks, pad)
+        vs = jnp.pad(vs, pad)
+    if rules is not None:
+        spec = P(None, rules.dp, rules.tp, None, None)
+        ks = _constrain(ks, spec)
+        vs = _constrain(vs, spec)
+    x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    head = params["head"] if "head" in params else params["embed"].T
+    logits = (x[:, 0] @ head).astype(jnp.float32)
+    if rules is not None:
+        logits = _constrain(logits, P(rules.dp, rules.tp))
+    return logits, {"k": ks, "v": vs}
+
+
+def decode_step(cfg: ModelConfig, params, token: jax.Array, cache,
+                pos: jax.Array, rules: Optional[Rules] = None,
+                msize: int = 1, mesh=None):
+    """One decode step. token: [B, 1]; cache k/v: [L, B, S, Hkv, dh];
+    pos: scalar int32 (current length).  Returns (logits [B, V], cache)."""
+    x = jnp.take(params["embed"], token, axis=0).astype(
+        jnp.dtype(cfg.act_dtype))
+
+    def body(h, layer_kv):
+        bp, kc, vc = layer_kv
+        h2, new_kv = _block(cfg, bp, h, rules=rules, msize=msize, mesh=mesh,
+                            cache=(kc, vc), pos=pos)
+        return h2, new_kv
+
+    x, (ks, vs) = jax.lax.scan(body, x,
+                               (params["blocks"], cache["k"], cache["v"]))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["head"] if "head" in params else params["embed"].T
+    logits = (x[:, 0] @ head).astype(jnp.float32)
+    if rules is not None:
+        logits = _constrain(logits, P(rules.dp, rules.tp))
+    return logits, {"k": ks, "v": vs}

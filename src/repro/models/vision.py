@@ -1,0 +1,146 @@
+"""llama-3.2-vision style VLM backbone: dense decoder with cross-attention
+layers every ``cross_every`` layers attending to (stubbed) image embeddings.
+
+Per the assignment spec the modality frontend is a STUB: ``input_specs()``
+provides precomputed patch embeddings [B, n_img_tokens, d_model]; only the
+transformer backbone is real.  Layers are grouped into superblocks of
+(cross_every - 1) self-attn layers + 1 (self-attn + cross-attn) layer so the
+stack is a scan over superblocks.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import Rules
+from .config import ModelConfig
+from .layers import _constrain, attention, rms_norm
+from .transformer import (_block as tf_block, block_params, chunked_ce_loss,
+                          _dt)
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    dt = _dt(cfg)
+    per = cfg.cross_every
+    n_super = cfg.n_layers // per
+    keys = jax.random.split(key, cfg.n_layers + 3)
+    plain = [block_params(cfg, keys[i]) for i in range(n_super * (per - 1))]
+    crosses = [block_params(cfg, keys[n_super * (per - 1) + i], cross=True)
+               for i in range(n_super)]
+    p = {
+        "embed": jax.random.normal(keys[-1], (cfg.vocab, cfg.d_model),
+                                   jnp.float32).astype(dt) * 0.02,
+        "plain": jax.tree.map(
+            lambda *xs: jnp.stack(xs).reshape(n_super, per - 1,
+                                              *xs[0].shape), *plain),
+        "cross": jax.tree.map(lambda *xs: jnp.stack(xs), *crosses),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+        "head": jax.random.normal(keys[-2], (cfg.d_model, cfg.vocab),
+                                  jnp.float32).astype(dt) * 0.02,
+    }
+    return p
+
+
+def _cross_block(cfg, bp, x, img_kv, *, rules, msize, mesh, cache, pos,
+                 cross_cache=None):
+    """Self-attn block + cross-attention to image embeddings.
+    Returns (x, self_kv, cross_kv)."""
+    x, self_kv = tf_block(cfg, bp, x, rules=rules, msize=msize, mesh=mesh,
+                          cache=cache, pos=pos)
+    h = rms_norm(x, bp["norm_x"], cfg.norm_eps)
+    if cross_cache is not None:
+        a, cross_kv = attention(cfg, bp["xattn"], h, rules=rules,
+                                model_size=msize, rope=False,
+                                cache=cross_cache, static_cache=True)
+    else:
+        a, cross_kv = attention(cfg, bp["xattn"], h, rules=rules,
+                                model_size=msize, x_kv=img_kv, rope=False,
+                                causal=False)
+    x = x + a
+    if rules is not None:
+        x = _constrain(x, rules.act())
+    return x, self_kv, cross_kv
+
+
+def forward(cfg: ModelConfig, params, tokens, img_embed, *, rules=None,
+            msize=1, mesh=None, mode="train", cache=None, pos=None,
+            cache_len: Optional[int] = None):
+    """img_embed: [B, n_img, D] stub patch embeddings.
+    Returns (hidden, cache)."""
+    per = cfg.cross_every
+    n_super = cfg.n_layers // per
+    bsz, t = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(
+        jnp.dtype(cfg.act_dtype))
+    if rules is not None:
+        x = _constrain(x, rules.act())
+    img = img_embed.astype(x.dtype)
+    decode = mode == "decode"
+
+    def plain_body(h, bp_and_cache):
+        bp, kc, vc = bp_and_cache
+        c = (kc, vc) if decode else None
+        h2, kv = tf_block(cfg, bp, h, rules=rules, msize=msize, mesh=mesh,
+                          cache=c, pos=pos if decode else None)
+        if mode == "train":
+            return h2, None          # don't stack K/V activations
+        return h2, kv
+
+    if cfg.remat and not decode:
+        plain_body = jax.checkpoint(
+            plain_body, policy=jax.checkpoint_policies.nothing_saveable)
+
+    k_plain, v_plain, k_cself, v_cself, k_cross, v_cross = ([] for _ in
+                                                            range(6))
+    for g in range(n_super):
+        gp = jax.tree.map(lambda a: a[g], params["plain"])
+        if decode:
+            kc = cache["k_plain"][g]
+            vc = cache["v_plain"][g]
+        else:
+            nlayers = per - 1
+            kc = vc = jnp.zeros((nlayers, 0, 0, 0, 0), x.dtype)
+        x, kv_ys = jax.lax.scan(plain_body, x, (gp, kc, vc))
+        if mode != "train":
+            k_plain.append(kv_ys[0])
+            v_plain.append(kv_ys[1])
+        cp = jax.tree.map(lambda a: a[g], params["cross"])
+        c = ((cache["k_cself"][g], cache["v_cself"][g]) if decode else None)
+        cx = ((cache["k_cross"][g], cache["v_cross"][g]) if decode else None)
+        cross_fn = lambda h, cp_: _cross_block(
+            cfg, cp_, h, img, rules=rules, msize=msize, mesh=mesh,
+            cache=c, pos=pos if decode else None, cross_cache=cx)
+        if cfg.remat and mode == "train":
+            cross_fn = jax.checkpoint(
+                cross_fn, policy=jax.checkpoint_policies.nothing_saveable)
+        x, self_kv, cross_kv = cross_fn(x, cp)
+        k_cself.append(self_kv[0])
+        v_cself.append(self_kv[1])
+        k_cross.append(cross_kv[0])
+        v_cross.append(cross_kv[1])
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        ks = jnp.stack(k_plain)       # [G, per-1, B, S, H, dh]
+        vs = jnp.stack(v_plain)
+        kcs = jnp.stack(k_cself)      # [G, B, S, H, dh]
+        vcs = jnp.stack(v_cself)
+        kx = jnp.stack(k_cross)
+        vx = jnp.stack(v_cross)
+        if mode == "prefill" and cache_len and cache_len > t:
+            pad6 = [(0, 0)] * 6
+            pad6[3] = (0, cache_len - t)
+            ks = jnp.pad(ks, pad6)
+            vs = jnp.pad(vs, pad6)
+            pad5 = [(0, 0)] * 5
+            pad5[2] = (0, cache_len - t)
+            kcs = jnp.pad(kcs, pad5)
+            vcs = jnp.pad(vcs, pad5)
+        new_cache = {"k_plain": ks, "v_plain": vs,
+                     "k_cself": kcs, "v_cself": vcs,
+                     "k_cross": kx, "v_cross": vx}
+    return x, new_cache

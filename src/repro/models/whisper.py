@@ -1,0 +1,112 @@
+"""Whisper-style encoder-decoder audio backbone (whisper-tiny config).
+
+Per the assignment spec the conv frontend is a STUB: ``input_specs()``
+provides precomputed frame embeddings [B, n_frames, d_model].  The encoder is
+bidirectional self-attention; the decoder interleaves causal self-attention
+and cross-attention to the encoder output.  (Deviation noted in DESIGN.md:
+rotary positions instead of Whisper's learned absolute embeddings — the
+systems shape is identical.)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import _constrain, attention, mlp, rms_norm
+from .transformer import _block as tf_block, block_params, _dt
+from .vision import _cross_block
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    dt = _dt(cfg)
+    keys = jax.random.split(key, cfg.enc_layers + cfg.n_layers + 3)
+    enc = [block_params(cfg, keys[i]) for i in range(cfg.enc_layers)]
+    dec = [block_params(cfg, keys[cfg.enc_layers + i], cross=True)
+           for i in range(cfg.n_layers)]
+    return {
+        "embed": jax.random.normal(keys[-1], (cfg.vocab, cfg.d_model),
+                                   jnp.float32).astype(dt) * 0.02,
+        "enc": jax.tree.map(lambda *xs: jnp.stack(xs), *enc),
+        "dec": jax.tree.map(lambda *xs: jnp.stack(xs), *dec),
+        "enc_norm": jnp.ones((cfg.d_model,), dt),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+        "head": jax.random.normal(keys[-2], (cfg.d_model, cfg.vocab),
+                                  jnp.float32).astype(dt) * 0.02,
+    }
+
+
+def encode(cfg, params, frames, *, rules=None, msize=1, mesh=None):
+    """frames: [B, n_frames, D] stub embeddings -> encoder output."""
+    x = frames.astype(jnp.dtype(cfg.act_dtype))
+
+    def body(h, bp):
+        hh = rms_norm(h, bp["norm1"], cfg.norm_eps)
+        a, _ = attention(cfg, bp["attn"], hh, rules=rules, model_size=msize,
+                         causal=False)
+        h = h + a
+        hh = rms_norm(h, bp["norm2"], cfg.norm_eps)
+        h = h + mlp(cfg, bp["mlp"], hh, rules)
+        return h, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["enc"])
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def forward(cfg: ModelConfig, params, tokens, frames, *, rules=None,
+            msize=1, mesh=None, mode="train", cache=None, pos=None,
+            cache_len: Optional[int] = None):
+    """Returns (decoder hidden, cache)."""
+    bsz, t = tokens.shape
+    decode = mode == "decode"
+    if decode:
+        enc_out = None          # cross K/V cached
+    else:
+        enc_out = encode(cfg, params, frames, rules=rules, msize=msize,
+                         mesh=mesh)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(
+        jnp.dtype(cfg.act_dtype))
+
+    def body(h, layer):
+        bp, kc, vc, kx, vx = layer
+        c = (kc, vc) if decode else None
+        h2, kv = tf_block(cfg, bp, h, rules=rules, msize=msize, mesh=mesh,
+                          cache=c, pos=pos if decode else None)
+        hh = rms_norm(h2, bp["norm_x"], cfg.norm_eps)
+        if decode:
+            a, _ = attention(cfg, bp["xattn"], hh, rules=rules,
+                             model_size=msize, rope=False,
+                             cache=(kx, vx), static_cache=True)
+            xkv = (kx, vx)
+        else:
+            a, xkv = attention(cfg, bp["xattn"], hh, rules=rules,
+                               model_size=msize, x_kv=enc_out, rope=False,
+                               causal=False)
+        h2 = h2 + a
+        return h2, (kv[0], kv[1], xkv[0], xkv[1])
+
+    if cfg.remat and not decode:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+
+    if decode:
+        xs = (params["dec"], cache["k"], cache["v"],
+              cache["k_cross"], cache["v_cross"])
+    else:
+        zeros = jnp.zeros((cfg.n_layers, 0, 0, 0, 0), x.dtype)
+        xs = (params["dec"], zeros, zeros, zeros, zeros)
+    x, (ks, vs, kxs, vxs) = jax.lax.scan(body, x, xs)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        if mode == "prefill" and cache_len and cache_len > t:
+            pad = [(0, 0), (0, 0), (0, cache_len - t), (0, 0), (0, 0)]
+            ks = jnp.pad(ks, pad)
+            vs = jnp.pad(vs, pad)
+        new_cache = {"k": ks, "v": vs, "k_cross": kxs, "v_cross": vxs}
+    return x, new_cache

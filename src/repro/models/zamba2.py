@@ -1,0 +1,162 @@
+"""Zamba2 (arXiv:2411.15242): Mamba2 backbone with *shared* attention blocks.
+
+Simplified structure (deviations in DESIGN.md): ``n_layers`` Mamba2 blocks;
+after every ``attn_every``-th Mamba block the single shared transformer block
+(attention + MLP, one parameter set reused at every application) is applied.
+Layers are grouped into superblocks of ``attn_every`` Mamba blocks + one
+shared-attention application so the whole stack is two nested scans.
+
+Decode state: per-layer (ssm, conv) states + one KV cache per shared-block
+application (weights shared, caches distinct).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import attention, attention_params, mlp, mlp_params, rms_norm
+from .mamba2 import mamba_block, mamba_params, CONV_W
+from .transformer import _block as tf_block, block_params as tf_block_params
+
+
+def n_shared_applications(cfg) -> int:
+    return cfg.n_layers // cfg.attn_every
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    dt = jnp.dtype(cfg.param_dtype)
+    per = cfg.attn_every
+    n_super = cfg.n_layers // per
+    n_tail = cfg.n_layers - n_super * per
+    keys = jax.random.split(key, cfg.n_layers + 4)
+    mb = [mamba_params(cfg, keys[i], dt) for i in range(cfg.n_layers)]
+    main = jax.tree.map(lambda *xs: jnp.stack(xs),
+                        *mb[:n_super * per])
+    main = jax.tree.map(
+        lambda a: a.reshape(n_super, per, *a.shape[1:]), main)
+    p = {
+        "embed": jax.random.normal(keys[-1], (cfg.vocab, cfg.d_model),
+                                   jnp.float32).astype(dt) * 0.02,
+        "super": main,
+        "shared": tf_block_params(cfg, keys[-2]),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+        "head": jax.random.normal(keys[-3], (cfg.d_model, cfg.vocab),
+                                  jnp.float32).astype(dt) * 0.02,
+    }
+    if n_tail:
+        p["tail"] = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                 *mb[n_super * per:])
+    return p
+
+
+def _zero_states(cfg, bsz, dtype):
+    d_in = 2 * cfg.d_model
+    nh = d_in // cfg.mamba_head_dim
+    conv_ch = d_in + 2 * cfg.ssm_state
+    ssm = jnp.zeros((bsz, nh, cfg.mamba_head_dim, cfg.ssm_state), dtype)
+    conv = jnp.zeros((bsz, CONV_W - 1, conv_ch), dtype)
+    return ssm, conv
+
+
+def forward(cfg: ModelConfig, params, tokens, *, rules=None, msize=1,
+            mesh=None, mode="train", cache=None, pos=None,
+            cache_len: Optional[int] = None):
+    """mode train/prefill/decode.  cache (decode):
+       {ssm [L,...], conv [L,...], k/v [A, B, S, H, dh]}."""
+    per = cfg.attn_every
+    n_super = cfg.n_layers // per
+    n_tail = cfg.n_layers - n_super * per
+    bsz, t = tokens.shape
+    dt_act = jnp.dtype(cfg.act_dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt_act)
+
+    decode = mode == "decode"
+    collect_cache = mode == "prefill"
+    new_cache: Dict[str, Any] = {}
+
+    if decode:
+        ssm_states, conv_states = cache["ssm"], cache["conv"]
+        last1 = None
+    else:
+        z_ssm, z_conv = _zero_states(cfg, bsz, dt_act)
+
+    # ---- superblocks: scan over groups, inner scan over mamba layers ----
+    def mamba_group(h, group_params, states):
+        def inner(hh, layer):
+            bp, st = layer
+            hh, st_new = mamba_block(cfg, bp, hh, rules=rules,
+                                     state=st, use_chunked=not decode)
+            if mode == "train":
+                return hh, None      # don't stack states as activations
+            return hh, st_new
+
+        if cfg.remat and not decode:
+            inner = jax.checkpoint(
+                inner, policy=jax.checkpoint_policies.nothing_saveable)
+        h, sts = jax.lax.scan(inner, h, (group_params, states))
+        return h, sts
+
+    ssm_list, conv_list, k_list, v_list = [], [], [], []
+    for g in range(n_super):
+        gp = jax.tree.map(lambda a: a[g], params["super"])
+        if decode:
+            states = (ssm_states[g * per:(g + 1) * per],
+                      conv_states[g * per:(g + 1) * per])
+        else:
+            states = (jnp.broadcast_to(z_ssm, (per,) + z_ssm.shape),
+                      jnp.broadcast_to(z_conv, (per,) + z_conv.shape))
+        x, sts_g = mamba_group(x, gp, states)
+        if mode != "train":
+            ssm_list.append(sts_g[0])
+            conv_list.append(sts_g[1])
+        # shared attention block
+        if decode:
+            kc = cache["k"][g]
+            vc = cache["v"][g]
+            x, kv = tf_block(cfg, params["shared"], x, rules=rules,
+                             msize=msize, mesh=mesh, cache=(kc, vc), pos=pos)
+            k_list.append(kv[0])
+            v_list.append(kv[1])
+        else:
+            shared_fn = lambda h: tf_block(cfg, params["shared"], h,
+                                           rules=rules, msize=msize,
+                                           mesh=mesh)
+            if cfg.remat and not collect_cache:
+                shared_fn = jax.checkpoint(
+                    shared_fn,
+                    policy=jax.checkpoint_policies.nothing_saveable)
+            x, kv = shared_fn(x)
+            if collect_cache:
+                k_list.append(kv[0])
+                v_list.append(kv[1])
+
+    if n_tail:
+        tp_ = params["tail"]
+        if decode:
+            states = (ssm_states[n_super * per:],
+                      conv_states[n_super * per:])
+        else:
+            states = (jnp.broadcast_to(z_ssm, (n_tail,) + z_ssm.shape),
+                      jnp.broadcast_to(z_conv, (n_tail,) + z_conv.shape))
+        x, sts_g = mamba_group(x, tp_, states)
+        if mode != "train":
+            ssm_list.append(sts_g[0])
+            conv_list.append(sts_g[1])
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if decode or collect_cache:
+        new_cache["ssm"] = jnp.concatenate(ssm_list, axis=0)
+        new_cache["conv"] = jnp.concatenate(conv_list, axis=0)
+        if k_list:
+            ks = jnp.stack(k_list)
+            vs = jnp.stack(v_list)
+            if collect_cache and cache_len and cache_len > t:
+                pad = [(0, 0), (0, 0), (0, cache_len - t), (0, 0), (0, 0)]
+                ks = jnp.pad(ks, pad)
+                vs = jnp.pad(vs, pad)
+            new_cache["k"] = ks
+            new_cache["v"] = vs
+    return x, new_cache

@@ -1,0 +1,186 @@
+"""Sharding rules: DP / FSDP(ZeRO) / TP / SP / EP over the production mesh.
+
+Axis roles (see launch/mesh.py):
+  - ``data`` axes (("pod","data") multi-pod, ("data",) single-pod): batch /
+    block-row parallelism; FSDP shards params+optimizer state over them.
+  - ``model`` axis: Megatron tensor parallelism (attention heads, FFN hidden,
+    vocab), sequence parallelism for the residual stream, expert parallelism
+    for MoE, and KV-cache sequence sharding for decode.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    data_axes: Tuple[str, ...] = ("data",)   # ("pod","data") when multi-pod
+    model_axis: str = "model"
+    fsdp: bool = True                         # ZeRO: shard params/opt over data
+    seq_parallel: bool = True                 # residual stream sharded over model
+    # attention TP mode: True -> shard KV heads over model (requires
+    # n_kv_heads % model_size == 0); False -> context parallelism on query
+    # blocks with attention weights replicated over model (FSDP only).
+    attn_tp: bool = True
+    # False when the global batch does not divide the data axes (long_500k
+    # batch=1): activation batch dims stay replicated; params still FSDP.
+    batch_shardable: bool = True
+    # decode KV-cache sequence sharding override (e.g. ("data","model") for
+    # 2D-sharded long-context caches); None -> model axis only.
+    seq_axes_decode: Optional[Tuple[str, ...]] = None
+
+    @property
+    def dp(self):
+        if not self.batch_shardable:
+            return None
+        return self.data_axes if len(self.data_axes) > 1 else self.data_axes[0]
+
+    @property
+    def tp(self):
+        return self.model_axis
+
+    # ---- activation specs ----
+    def act(self) -> P:
+        """Residual stream [B, S, D]."""
+        if self.seq_parallel:
+            return P(self.dp, self.tp, None)
+        return P(self.dp, None, None)
+
+    def act_full(self) -> P:
+        """[B, S, D] inside a TP region (sequence gathered)."""
+        return P(self.dp, None, None)
+
+    def heads(self, n_heads: int, model_size: int) -> P:
+        """[B, S, H, dh] — heads sharded when divisible, else replicated."""
+        if n_heads % model_size == 0:
+            return P(self.dp, None, self.tp, None)
+        return P(self.dp, None, None, None)
+
+    def kv_cache_decode(self) -> P:
+        """[B, S, H_kv, dh] — decode cache is sequence-sharded over model
+        (works for any GQA head count; softmax/contraction reductions over
+        the sharded axis become psums)."""
+        seq = self.seq_axes_decode or self.tp
+        return P(self.dp, seq, None, None)
+
+    @property
+    def decode_seq(self):
+        return self.seq_axes_decode or self.tp
+
+    def logits(self) -> P:
+        return P(self.dp, None, self.tp)
+
+
+def mesh_axis_size(mesh: Mesh, axes) -> int:
+    if isinstance(axes, str):
+        axes = (axes,)
+    out = 1
+    for a in axes:
+        out *= mesh.shape[a]
+    return out
+
+
+def _maybe_fsdp(spec: Sequence, shape: Tuple[int, ...], rules: Rules,
+                mesh: Mesh) -> P:
+    """Add the data axes to the largest still-unsharded divisible dim (ZeRO)."""
+    if not rules.fsdp:
+        return P(*spec)
+    dsize = mesh_axis_size(mesh, rules.data_axes)
+    dp = rules.data_axes if len(rules.data_axes) > 1 else rules.data_axes[0]
+    spec = list(spec)
+    order = sorted(range(len(shape)), key=lambda i: -shape[i])
+    for i in order:
+        if spec[i] is None and shape[i] % dsize == 0 and shape[i] >= dsize:
+            spec[i] = dp
+            break
+    return P(*spec)
+
+
+def param_spec(path: str, shape: Tuple[int, ...], rules: Rules,
+               mesh: Mesh) -> P:
+    """Map a parameter (by path name) to its PartitionSpec.
+
+    Stacked-by-layer params (leading L dim from scan) are detected by the
+    ``blocks/`` prefix: the layer dim is never sharded.
+    """
+    tp = rules.tp
+    msize = mesh.shape[tp]
+    stacked = path.startswith("blocks/") or "/blocks/" in path
+    core = shape[1:] if stacked else shape
+    name = path.split("/")[-1]
+
+    def out(core_spec):
+        full = ((None,) + tuple(core_spec)) if stacked else tuple(core_spec)
+        return _maybe_fsdp(full, shape, rules, mesh)
+
+    def tp_ok(dim):
+        return dim % msize == 0 and dim >= msize
+
+    if len(core) == 1:
+        return out([None])
+    if name in ("embed", "unembed", "head"):
+        # [V, D] / [D, V]
+        big = 0 if core[0] > core[1] else 1
+        spec = [None, None]
+        if tp_ok(core[big]):
+            spec[big] = tp
+        return out(spec)
+    if name in ("wq", "wk", "wv"):
+        spec = [None] * len(core)
+        if rules.attn_tp and tp_ok(core[-1]):
+            spec[-1] = tp
+        return out(spec)
+    if name == "wo":
+        spec = [None] * len(core)
+        if rules.attn_tp and tp_ok(core[0]):
+            spec[0] = tp
+        return out(spec)
+    if name in ("wkv", "w_in", "w1", "w3", "w_gate",
+                "w_up", "r_proj", "k_proj", "v_proj", "g_proj", "in_proj",
+                "cm_k"):
+        spec = [None] * len(core)
+        if tp_ok(core[-1]):
+            spec[-1] = tp
+        return out(spec)
+    if name in ("w2", "w_down", "w_out", "o_proj", "out_proj", "cm_v"):
+        spec = [None] * len(core)
+        if tp_ok(core[0]):
+            spec[0] = tp
+        return out(spec)
+    if name.startswith("moe_"):
+        # [E, D, F] expert-parallel when E divisible, else shard F
+        e, dd, f = core
+        if e % msize == 0:
+            return out([tp, None, None])
+        if name == "moe_w2":    # [E, F, D]
+            return out([None, tp, None])
+        return out([None, None, tp])
+    # default: shard the largest TP-divisible dim
+    spec = [None] * len(core)
+    order = sorted(range(len(core)), key=lambda i: -core[i])
+    for i in order:
+        if tp_ok(core[i]):
+            spec[i] = tp
+            break
+    return out(spec)
+
+
+def make_param_shardings(params, rules: Rules, mesh: Mesh):
+    """NamedShardings pytree for a params pytree (works on SDS trees)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        specs.append(NamedSharding(mesh, param_spec(name, leaf.shape,
+                                                    rules, mesh)))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def constrain(x, spec: P):
+    return jax.lax.with_sharding_constraint(x, spec)

@@ -1,0 +1,143 @@
+"""Collective-byte accounting over post-SPMD HLO, with while-loop trip-count
+correction.
+
+``compiled.as_text()`` gives the partitioned module: collective ops carry
+per-device operand shapes.  A flat regex sum undercounts collectives inside
+scan-lowered while loops (the body appears once but executes trip-count
+times), so we parse the module into computations, build the call graph
+(fusion/call/while/conditional), read each while's trip count out of its
+condition computation (the ``constant(N)`` compared against the induction
+variable), and accumulate bytes multiplicatively down the call tree.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Tuple
+
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\([^)]*\)\s*->")
+_COLL = re.compile(
+    r"=\s*[\w\[\],:{}\s]*?(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(")
+_SHAPE_PREFIX = re.compile(r"=\s*\(?\s*((?:[a-z0-9]+\[[0-9,]*\][^)]*?,?\s*)+)")
+_SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_CALLS = re.compile(r"(?:calls=|to_apply=|condition=|body=)%?([\w\.\-]+)")
+_WHILE = re.compile(r"while\(.*?\).*?condition=%?([\w\.\-]+).*?body=%?"
+                    r"([\w\.\-]+)")
+_CONST_INT = re.compile(r"constant\((\d+)\)")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+
+def split_computations(text: str) -> Dict[str, List[str]]:
+    """Top-level computation blocks: a header line starts at column 0,
+    contains '->' and ends with '{'; the block ends at a column-0 '}'.
+    (Param lists may contain nested parens from tuple types, so the header
+    is detected structurally rather than by a paren-matching regex.)"""
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if (line and not line[0].isspace() and stripped.endswith("{")
+                and "->" in line):
+            tokens = stripped.split()
+            name = tokens[1] if tokens[0] == "ENTRY" and len(tokens) > 1 \
+                else tokens[0]
+            cur = name.lstrip("%").split("(")[0]
+            comps[cur] = []
+        elif stripped == "}" and line and not line[0].isspace():
+            cur = None
+        elif cur is not None:
+            comps[cur].append(stripped)
+    return comps
+
+
+def _line_bytes(line: str) -> int:
+    m = _SHAPE_PREFIX.search(line)
+    if not m:
+        return 0
+    total = 0
+    for dt, dims in _SHAPE.findall(m.group(1)):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(text: str) -> Dict[str, float]:
+    """Per-collective-kind bytes with loop correction (per-device)."""
+    comps = split_computations(text)
+    entry = None
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_HEADER.match(line)
+            if m:
+                entry = m.group(1)
+    if entry is None:
+        # fall back: last computation
+        entry = list(comps)[-1] if comps else None
+    if entry is None:
+        return {}
+
+    def trip_count(cond_name: str) -> int:
+        """Trip count = the integer constant the induction variable is
+        compared against; fall back to the max constant in the condition."""
+        best = 1
+        lines = comps.get(cond_name, [])
+        cmp_lines = [ln for ln in lines if "compare(" in ln]
+        for ln in (cmp_lines or lines):
+            for c in _CONST_INT.findall(ln):
+                best = max(best, int(c))
+        if best == 1 and cmp_lines:
+            for ln in lines:
+                for c in _CONST_INT.findall(ln):
+                    best = max(best, int(c))
+        return best
+
+    memo: Dict[str, Dict[str, float]] = {}
+
+    def visit(name: str, depth=0) -> Dict[str, float]:
+        if name in memo:
+            return memo[name]
+        if depth > 50 or name not in comps:
+            return {}
+        out: Dict[str, float] = {}
+        memo[name] = out          # cycle guard
+        for line in comps[name]:
+            cm = _COLL.search(line)
+            if cm:
+                out[cm.group(1)] = out.get(cm.group(1), 0) + \
+                    _line_bytes(line)
+            wm = _WHILE.search(line)
+            if wm:
+                cond, body = wm.group(1), wm.group(2)
+                tc = trip_count(cond)
+                sub = visit(body, depth + 1)
+                for k, v in sub.items():
+                    out[k] = out.get(k, 0) + tc * v
+                continue
+            for callee in _CALLS.findall(line):
+                if callee == name or "while(" in line:
+                    continue
+                sub = visit(callee, depth + 1)
+                for k, v in sub.items():
+                    out[k] = out.get(k, 0) + v
+        memo[name] = out
+        return out
+
+    return visit(entry)
+
+
+def collective_bytes_flat(text: str) -> Dict[str, float]:
+    """Naive sum (no loop correction) — reported for comparison."""
+    out: Dict[str, float] = {}
+    for line in text.splitlines():
+        m = _COLL.search(line)
+        if m:
+            out[m.group(1)] = out.get(m.group(1), 0) + _line_bytes(line)
+    return out

@@ -1,0 +1,174 @@
+"""Static cost analysis on jaxprs: exact FLOPs/bytes including loop trip
+counts.
+
+XLA's ``compiled.cost_analysis()`` visits each while-loop body ONCE, so a
+64-layer scanned model under-reports by 64x (verified empirically — see
+EXPERIMENTS.md §Roofline methodology).  This walker multiplies ``scan``
+bodies by their trip count, recurses through pjit/remat/shard_map/cond, and
+counts:
+
+  * flops — 2*M*N*K per dot_general (batch dims included), 1 flop/element
+    for elementwise ops (exp/log etc. weighted heavier);
+  * bytes — operand+result bytes per op: an *unfused upper bound* on HBM
+    traffic (XLA fusion reduces real traffic; the roofline memory term built
+    from this is pessimistic and flagged as such).
+
+shard_map bodies have per-shard shapes; their cost is multiplied by the
+number of participating devices so the returned numbers are always GLOBAL.
+Divide by device count for per-device roofline terms.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import numpy as np
+from jax import core as jcore
+
+TRANSCENDENTAL_WEIGHT = 4      # exp/log/tanh/erf cost in flop units
+
+_TRANSCENDENTAL = {"exp", "log", "tanh", "logistic", "erf", "rsqrt", "sqrt",
+                   "sin", "cos", "pow", "cbrt", "log1p", "expm1"}
+_FREE = {"reshape", "squeeze", "broadcast_in_dim", "transpose", "convert_element_type",
+         "bitcast_convert_type", "stop_gradient", "copy", "slice",
+         "dynamic_slice", "dynamic_update_slice", "concatenate", "pad",
+         "gather", "scatter", "scatter-add", "rev", "iota", "eq", "lt", "gt",
+         "ge", "le", "ne", "and", "or", "not", "select_n", "sign",
+         "reduce_precision", "real", "imag"}
+
+
+def _size_bytes(aval) -> int:
+    try:
+        return int(np.prod(aval.shape)) * aval.dtype.itemsize
+    except Exception:
+        return 0
+
+
+def _nelem(aval) -> int:
+    try:
+        return int(np.prod(aval.shape))
+    except Exception:
+        return 0
+
+
+def _dot_flops(eqn) -> int:
+    dn = eqn.params["dimension_numbers"]
+    (lc, rc), (lb, rb) = dn
+    lhs, rhs = eqn.invars[0].aval, eqn.invars[1].aval
+    batch = 1
+    for d in lb:
+        batch *= lhs.shape[d]
+    contract = 1
+    for d in lc:
+        contract *= lhs.shape[d]
+    m = 1
+    for i, d in enumerate(lhs.shape):
+        if i not in lc and i not in lb:
+            m *= d
+    n = 1
+    for i, d in enumerate(rhs.shape):
+        if i not in rc and i not in rb:
+            n *= d
+    return 2 * batch * m * n * contract
+
+
+def _io_bytes(eqn) -> int:
+    total = 0
+    for v in eqn.invars:
+        if hasattr(v, "aval"):
+            total += _size_bytes(v.aval)
+    for v in eqn.outvars:
+        if hasattr(v, "aval"):
+            total += _size_bytes(v.aval)
+    return total
+
+
+def _mesh_size(params) -> int:
+    mesh = params.get("mesh")
+    if mesh is None:
+        return 1
+    try:
+        return int(np.prod(list(mesh.shape.values())))
+    except Exception:
+        try:
+            return int(np.prod(mesh.axis_sizes))
+        except Exception:
+            return 1
+
+
+def count_jaxpr(jaxpr, mult: int = 1) -> Dict[str, float]:
+    """Walk one jaxpr; returns {'flops', 'bytes'} scaled by ``mult``."""
+    flops = 0.0
+    bytes_ = 0.0
+
+    for eqn in jaxpr.eqns:
+        prim = eqn.primitive.name
+        if prim == "dot_general":
+            flops += _dot_flops(eqn)
+            bytes_ += _io_bytes(eqn)
+        elif prim == "scan":
+            inner = count_jaxpr(eqn.params["jaxpr"].jaxpr, 1)
+            ln = eqn.params["length"]
+            flops += ln * inner["flops"]
+            bytes_ += ln * inner["bytes"]
+        elif prim == "while":
+            inner = count_jaxpr(eqn.params["body_jaxpr"].jaxpr, 1)
+            flops += inner["flops"]          # trip count unknown: lower bound
+            bytes_ += inner["bytes"]
+        elif prim == "cond":
+            branches = [count_jaxpr(b.jaxpr, 1)
+                        for b in eqn.params["branches"]]
+            flops += max(b["flops"] for b in branches)
+            bytes_ += max(b["bytes"] for b in branches)
+        elif prim in ("pjit", "jit", "closed_call", "core_call",
+                      "remat_call", "xla_call", "custom_jvp_call",
+                      "custom_vjp_call", "custom_vjp_call_jaxpr",
+                      "checkpoint", "remat", "remat2"):
+            sub = (eqn.params.get("jaxpr") or eqn.params.get("call_jaxpr")
+                   or eqn.params.get("fun_jaxpr"))
+            if sub is not None:
+                inner = count_jaxpr(getattr(sub, "jaxpr", sub), 1)
+                flops += inner["flops"]
+                bytes_ += inner["bytes"]
+        elif prim == "shard_map":
+            sub = eqn.params.get("jaxpr")
+            inner = count_jaxpr(getattr(sub, "jaxpr", sub), 1)
+            n = _mesh_size(eqn.params)
+            flops += n * inner["flops"]
+            bytes_ += n * inner["bytes"]
+        elif prim in ("conv_general_dilated",):
+            lhs = eqn.invars[0].aval
+            rhs = eqn.invars[1].aval
+            out = eqn.outvars[0].aval
+            k_elems = int(np.prod(rhs.shape))
+            flops += 2 * _nelem(out) * k_elems // max(rhs.shape[0], 1)
+            bytes_ += _io_bytes(eqn)
+        elif prim.startswith("reduce_") or prim in ("reduce_sum", "reduce_max",
+                                                    "reduce_min", "argmax",
+                                                    "argmin", "reduce_and",
+                                                    "reduce_or"):
+            flops += _nelem(eqn.invars[0].aval)
+            bytes_ += _io_bytes(eqn)
+        elif prim in ("cumsum", "cumprod", "cummax", "sort", "top_k",
+                      "argsort"):
+            flops += 4 * _nelem(eqn.invars[0].aval)
+            bytes_ += _io_bytes(eqn)
+        elif prim in _FREE:
+            bytes_ += _io_bytes(eqn)
+        elif prim in _TRANSCENDENTAL:
+            flops += TRANSCENDENTAL_WEIGHT * _nelem(eqn.outvars[0].aval)
+            bytes_ += _io_bytes(eqn)
+        else:
+            # generic elementwise (add/mul/div/max/...)
+            out_n = _nelem(eqn.outvars[0].aval) if eqn.outvars else 0
+            flops += out_n
+            bytes_ += _io_bytes(eqn)
+
+    return {"flops": mult * flops, "bytes": mult * bytes_}
+
+
+def analyze(fn, *args) -> Dict[str, float]:
+    """Trace ``fn`` with abstract args and return global flops/bytes."""
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    return count_jaxpr(jaxpr.jaxpr)

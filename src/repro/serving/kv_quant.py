@@ -1,0 +1,75 @@
+"""int8 KV-cache quantization (production decode-memory feature).
+
+The §Dry-run table shows MHA-heavy decode (codeqwen: 17 GB/device of bf16
+cache at bs=128 x 32k on 256 chips) is HBM-capacity-bound.  Per-(position,
+head) absmax int8 quantization halves/quarters the cache with ~1e-2 relative
+error on attention outputs — standard serving practice (the same
+low-rank/precision trade the paper's compression makes for operators).
+
+Layout: values int8 [B, S, H, dh]; scales f16 [B, S, H, 1].
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class QuantCache(NamedTuple):
+    q: jax.Array          # int8 [B, S, H, dh]
+    scale: jax.Array      # f16  [B, S, H, 1]
+
+
+def quantize(x: jax.Array) -> QuantCache:
+    """Per-(b, s, h) absmax int8."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127
+                 ).astype(jnp.int8)
+    return QuantCache(q=q, scale=scale.astype(jnp.float16))
+
+
+def dequantize(c: QuantCache, dtype=jnp.float32) -> jax.Array:
+    return (c.q.astype(jnp.float32) * c.scale.astype(jnp.float32)
+            ).astype(dtype)
+
+
+def update(c: QuantCache, new_kv: jax.Array, pos) -> QuantCache:
+    """Append one step's K or V at ``pos`` (quantized in place)."""
+    nq = quantize(new_kv)
+    q = jax.lax.dynamic_update_slice_in_dim(c.q, nq.q, pos, axis=1)
+    s = jax.lax.dynamic_update_slice_in_dim(c.scale, nq.scale, pos, axis=1)
+    return QuantCache(q=q, scale=s)
+
+
+def decode_attention_q(q: jax.Array, kc: QuantCache, vc: QuantCache,
+                       length_mask: jax.Array) -> jax.Array:
+    """One-token attention against int8 caches (dequantized on the fly —
+    on TPU this halves the HBM read volume, the decode bottleneck).
+    q: [B,1,H,dh]; caches [B,S,Hkv,dh]-shaped."""
+    b, _, h, hd = q.shape
+    hkv = kc.q.shape[2]
+    g = h // hkv
+    scale = 1.0 / np.sqrt(hd)
+    qh = q.reshape(b, hkv, g, hd).astype(jnp.float32)
+    # fold the k/v scales into score/probs instead of materializing
+    # dequantized caches ([B,S,H] broadcast, negligible)
+    k_scale = jnp.moveaxis(kc.scale.astype(jnp.float32)[..., 0], 1, -1)
+    v_scale = jnp.moveaxis(vc.scale.astype(jnp.float32)[..., 0], 1, -1)
+    sc = jnp.einsum("bhgd,bshd->bhgs", qh, kc.q.astype(jnp.float32)) * scale
+    sc = sc * k_scale[:, :, None, :]
+    sc = jnp.where(length_mask[:, None, None, :], sc, -1e30)
+    p = jax.nn.softmax(sc, axis=-1)
+    pv = jnp.einsum("bhgs,bshd->bhgd", p * v_scale[:, :, None, :],
+                    vc.q.astype(jnp.float32))
+    return pv.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+def cache_bytes(shape: Tuple[int, ...], dtype_bytes: int = 2) -> Tuple[int, int]:
+    """(bf16 bytes, int8+scale bytes) for a [B,S,H,dh] cache."""
+    b, s, h, dh = shape
+    full = b * s * h * dh * dtype_bytes
+    quant = b * s * h * dh * 1 + b * s * h * 2
+    return full, quant

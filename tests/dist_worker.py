@@ -1,0 +1,103 @@
+"""Multi-device distributed-H2 checks; run in a subprocess with 8 fake devices.
+
+Prints one "OK <name>" line per passing check; the pytest wrapper asserts on
+them.  (Device count must be set before jax initializes, hence the
+subprocess.)
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=8 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import numpy as np          # noqa: E402
+import jax                  # noqa: E402
+import jax.numpy as jnp     # noqa: E402
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.core.clustering import regular_grid_points      # noqa: E402
+from repro.core.construction import construct_h2            # noqa: E402
+from repro.core.kernels_fn import exponential_kernel        # noqa: E402
+from repro.core.matvec import h2_matvec                     # noqa: E402
+from repro.core.compression import compress                 # noqa: E402
+from repro.core.dist import (partition_h2, make_dist_matvec,  # noqa: E402
+                             make_dist_compress, matvec_comm_bytes,
+                             dist_specs)
+
+
+def main():
+    assert len(jax.devices()) == 8, jax.devices()
+    mesh = jax.make_mesh((8,), ("blk",))
+
+    pts = regular_grid_points(32, 2)      # N = 1024
+    shape, data, tree, bs = construct_h2(pts, exponential_kernel(0.1),
+                                         leaf_size=16, cheb_p=4, eta=0.9)
+    dshape, ddata = partition_h2(shape, data, 8)
+    print("OK partition", dshape.br_radius, dshape.dense_radius)
+
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((shape.n, 4)), jnp.float32)
+    y_ref = np.asarray(h2_matvec(shape, data, x))
+
+    # place the distributed data on the mesh
+    specs = dist_specs(dshape, "blk")
+    ddata_dev = jax.tree.map(
+        lambda a, s: jax.device_put(a, NamedSharding(mesh, s)),
+        ddata, specs)
+    x_dev = jax.device_put(x, NamedSharding(mesh, P("blk", None)))
+
+    for comm in ("allgather", "ppermute"):
+        mv = make_dist_matvec(dshape, mesh, "blk", comm=comm)
+        y = np.asarray(mv(ddata_dev, x_dev))
+        err = np.linalg.norm(y - y_ref) / np.linalg.norm(y_ref)
+        assert err < 1e-5, (comm, err)
+        print(f"OK matvec_{comm}", err)
+
+    # comm model: ppermute strictly cheaper than allgather
+    b_pp = matvec_comm_bytes(dshape, 4, "ppermute")
+    b_ag = matvec_comm_bytes(dshape, 4, "allgather")
+    assert b_pp < b_ag, (b_pp, b_ag)
+    print("OK comm_model", b_pp, b_ag)
+
+    # distributed compression vs single-device compression
+    tgt = tuple(min(10, k) for k in shape.ranks)
+    cs, cd = compress(shape, data, target_ranks=tgt)
+    y_c_ref = np.asarray(h2_matvec(cs, cd, x))
+
+    comp = make_dist_compress(dshape, mesh, "blk", tgt)
+    cdd = comp(ddata_dev)
+    # the compressed distributed matrix has the new ranks
+    import dataclasses
+    dshape_c = dataclasses.replace(dshape, ranks=tgt)
+    mv_c = make_dist_matvec(dshape_c, mesh, "blk", comm="ppermute")
+    y_c = np.asarray(mv_c(cdd, x_dev))
+    err_vs_ref = (np.linalg.norm(y_c - y_c_ref) /
+                  np.linalg.norm(y_c_ref))
+    err_vs_full = (np.linalg.norm(y_c - y_ref) /
+                   np.linalg.norm(y_ref))
+    # both single and distributed compression approximate the full matvec;
+    # they need not be bitwise equal (different QR/SVD sign choices), so we
+    # compare approximation quality.
+    assert err_vs_full < 5e-2, err_vs_full
+    print("OK dist_compress", err_vs_ref, err_vs_full)
+
+    # multi-vector sharding over a second mesh axis
+    mesh2 = jax.make_mesh((4, 2), ("blk", "nv"))
+    dshape2, ddata2 = partition_h2(shape, data, 4)
+    specs2 = dist_specs(dshape2, "blk")
+    dd2 = jax.tree.map(
+        lambda a, s: jax.device_put(a, NamedSharding(mesh2, s)),
+        ddata2, specs2)
+    x2 = jax.device_put(x, NamedSharding(mesh2, P("blk", "nv")))
+    mv2 = make_dist_matvec(dshape2, mesh2, "blk", comm="ppermute",
+                           nv_axis="nv")
+    y2 = np.asarray(mv2(dd2, x2))
+    err2 = np.linalg.norm(y2 - y_ref) / np.linalg.norm(y_ref)
+    assert err2 < 1e-5, err2
+    print("OK matvec_2d_mesh", err2)
+
+    print("ALL_OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""Orthogonalization + algebraic recompression correctness (paper §5, §6.3)."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core.clustering import regular_grid_points
+from repro.core.construction import construct_h2, dense_reference
+from repro.core.kernels_fn import exponential_kernel
+from repro.core.matvec import h2_matvec
+from repro.core.orthogonalize import orthogonalize
+from repro.core.compression import compress, compression_weights
+from repro.core.reconstruct import reconstruct_dense, check_orthogonal
+from repro.core.structure import shape_of
+
+
+def _setup(side=16, leaf=8, p=5, eta=0.9):
+    pts = regular_grid_points(side, 2)
+    kern = exponential_kernel(0.1)
+    shape, data, tree, bs = construct_h2(pts, kern, leaf_size=leaf,
+                                         cheb_p=p, eta=eta,
+                                         dtype=jnp.float32)
+    return shape, data, tree
+
+
+class TestOrthogonalize:
+    def test_bases_become_orthonormal(self):
+        shape, data, _ = _setup()
+        od = orthogonalize(shape, data)
+        dev = check_orthogonal(shape, od)
+        assert dev < 1e-4, dev
+
+    def test_matrix_unchanged(self):
+        shape, data, _ = _setup()
+        a0 = reconstruct_dense(shape, data)
+        od = orthogonalize(shape, data)
+        s2 = shape_of(od, shape.leaf_size)
+        a1 = reconstruct_dense(s2, od)
+        rel = np.abs(a1 - a0).max() / np.abs(a0).max()
+        assert rel < 1e-4, rel
+
+    def test_matvec_unchanged(self):
+        shape, data, _ = _setup()
+        od = orthogonalize(shape, data)
+        s2 = shape_of(od, shape.leaf_size)
+        x = np.random.default_rng(0).standard_normal((shape.n, 2)).astype(np.float32)
+        y0 = np.asarray(h2_matvec(shape, data, jnp.asarray(x)))
+        y1 = np.asarray(h2_matvec(s2, od, jnp.asarray(x)))
+        np.testing.assert_allclose(y0, y1, rtol=2e-3, atol=2e-3)
+
+
+class TestCompression:
+    def test_tol_mode_error_bounded(self):
+        shape, data, _ = _setup(p=6)
+        a0 = reconstruct_dense(shape, data)
+        for tol in (1e-1, 1e-2, 1e-3):
+            cs, cd = compress(shape, data, tol=tol)
+            a1 = reconstruct_dense(cs, cd)
+            rel = np.linalg.norm(a1 - a0) / np.linalg.norm(a0)
+            assert rel < 50 * tol, (tol, rel)
+
+    def test_memory_reduction(self):
+        shape, data, _ = _setup(p=6)           # rank 36, paper's 2D setup
+        cs, cd = compress(shape, data, tol=1e-3)
+        ratio = shape.memory_lowrank() / cs.memory_lowrank()
+        assert ratio > 2.0, ratio              # paper reports ~6x at scale
+
+    def test_fixed_ranks_jitable(self):
+        shape, data, _ = _setup(p=4)
+        tgt = tuple(min(8, k) for k in shape.ranks)
+        cs, cd = compress(shape, data, target_ranks=tgt)
+        assert cs.ranks == tuple(min(8, k) for k in shape.ranks) or \
+            all(r <= t for r, t in zip(cs.ranks, tgt))
+        a0 = reconstruct_dense(shape, data)
+        a1 = reconstruct_dense(cs, cd)
+        rel = np.linalg.norm(a1 - a0) / np.linalg.norm(a0)
+        assert rel < 0.3, rel
+
+    def test_compressed_matvec_close(self):
+        shape, data, _ = _setup(p=6)
+        cs, cd = compress(shape, data, tol=1e-4)
+        x = np.random.default_rng(1).standard_normal((shape.n, 3)).astype(np.float32)
+        y0 = np.asarray(h2_matvec(shape, data, jnp.asarray(x)))
+        y1 = np.asarray(h2_matvec(cs, cd, jnp.asarray(x)))
+        rel = np.linalg.norm(y1 - y0) / np.linalg.norm(y0)
+        assert rel < 1e-2, rel
+
+    def test_weights_shapes(self):
+        shape, data, _ = _setup(p=4)
+        od = orthogonalize(shape, data)
+        s2 = shape_of(od, shape.leaf_size)
+        s2 = type(s2)(**{**s2.__dict__,
+                         "row_maxb": shape.row_maxb,
+                         "col_maxb": shape.col_maxb})
+        ru, rv = compression_weights(s2, od)
+        for l in range(shape.depth + 1):
+            assert ru[l].shape == (shape.nodes(l), s2.ranks[l], s2.ranks[l])

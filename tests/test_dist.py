@@ -1,0 +1,24 @@
+"""Distributed H2 correctness — runs the 8-fake-device worker in a subprocess
+(jax locks the device count at first init, so the main test process can't
+host multi-device checks itself)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+def test_distributed_h2_8dev():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    proc = subprocess.run(
+        [sys.executable, os.path.join(os.path.dirname(__file__),
+                                      "dist_worker.py")],
+        capture_output=True, text=True, timeout=900, env=env)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    out = proc.stdout
+    for marker in ("OK partition", "OK matvec_allgather", "OK matvec_ppermute",
+                   "OK comm_model", "OK dist_compress", "OK matvec_2d_mesh",
+                   "ALL_OK"):
+        assert marker in out, (marker, out, proc.stderr)

@@ -1,0 +1,74 @@
+"""H^2 matvec correctness vs the dense kernel matrix (paper §6.1 setup)."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core.clustering import regular_grid_points
+from repro.core.construction import construct_h2, dense_reference
+from repro.core.kernels_fn import exponential_kernel
+from repro.core.matvec import h2_matvec, h2_matvec_flops
+
+
+def _setup_2d(side=32, leaf=16, p=4, eta=0.9):
+    pts = regular_grid_points(side, 2)
+    kern = exponential_kernel(0.1 * 1.0)   # grid side length a = 1.0
+    shape, data, tree, bs = construct_h2(pts, kern, leaf_size=leaf,
+                                         cheb_p=p, eta=eta,
+                                         dtype=jnp.float32)
+    dense = dense_reference(pts, kern, tree.perm)
+    return shape, data, tree, dense
+
+
+class TestMatvec2D:
+    def test_matvec_close_to_dense(self):
+        shape, data, tree, dense = _setup_2d()
+        rng = np.random.default_rng(0)
+        x = rng.standard_normal((shape.n, 4)).astype(np.float32)
+        y = np.asarray(h2_matvec(shape, data, jnp.asarray(x)))
+        y_ref = dense @ x
+        rel = np.linalg.norm(y - y_ref) / np.linalg.norm(y_ref)
+        assert rel < 1e-2, rel  # p=4 (k=16) Chebyshev on a 32x32 grid
+
+    def test_accuracy_improves_with_p(self):
+        errs = []
+        for p in (2, 4, 6):
+            shape, data, tree, dense = _setup_2d(p=p)
+            rng = np.random.default_rng(1)
+            x = rng.standard_normal((shape.n, 1)).astype(np.float32)
+            y = np.asarray(h2_matvec(shape, data, jnp.asarray(x)))
+            y_ref = dense @ x
+            errs.append(np.linalg.norm(y - y_ref) / np.linalg.norm(y_ref))
+        assert errs[1] < errs[0] and errs[2] <= errs[1] * 2, errs
+
+    def test_multivector_matches_loop(self):
+        shape, data, tree, dense = _setup_2d(side=16, leaf=8)
+        rng = np.random.default_rng(2)
+        x = rng.standard_normal((shape.n, 8)).astype(np.float32)
+        y_all = np.asarray(h2_matvec(shape, data, jnp.asarray(x)))
+        for j in range(8):
+            yj = np.asarray(h2_matvec(shape, data, jnp.asarray(x[:, j:j + 1])))
+            np.testing.assert_allclose(y_all[:, j:j + 1], yj, rtol=1e-5,
+                                       atol=1e-5)
+
+    def test_flops_model_positive(self):
+        shape, data, tree, dense = _setup_2d(side=16, leaf=8)
+        assert h2_matvec_flops(shape, 1) > 0
+        assert h2_matvec_flops(shape, 64) > 32 * h2_matvec_flops(shape, 1)
+
+
+class TestStructure:
+    def test_structure_is_partition(self):
+        """Coupling + dense blocks exactly tile the matrix (no gap/overlap)."""
+        shape, data, tree, dense = _setup_2d(side=16, leaf=8)
+        n = shape.n
+        cover = np.zeros((n, n), np.int32)
+        for l in range(shape.depth + 1):
+            w = n >> l
+            for r, c in zip(np.asarray(data.s_rows[l]),
+                            np.asarray(data.s_cols[l])):
+                cover[r * w:(r + 1) * w, c * w:(c + 1) * w] += 1
+        m = shape.leaf_size
+        for r, c in zip(np.asarray(data.d_rows), np.asarray(data.d_cols)):
+            cover[r * m:(r + 1) * m, c * m:(c + 1) * m] += 1
+        assert (cover == 1).all()

@@ -1,0 +1,122 @@
+"""Hypothesis property tests on the system's core invariants."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.clustering import build_cluster_tree
+from repro.core.admissibility import build_block_structure
+from repro.core.construction import construct_h2, dense_reference
+from repro.core.kernels_fn import exponential_kernel
+from repro.core.matvec import h2_matvec
+from repro.perf.jaxpr_cost import analyze
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+@settings(**SETTINGS)
+@given(depth=st.integers(2, 5), leaf=st.sampled_from([4, 8]),
+       dim=st.integers(1, 2), seed=st.integers(0, 10**6))
+def test_cluster_tree_is_partition(depth, leaf, dim, seed):
+    """perm is a permutation; every level's boxes contain their points."""
+    n = leaf * (1 << depth)
+    pts = np.random.default_rng(seed).uniform(-1, 1, (n, dim))
+    tree = build_cluster_tree(pts, leaf)
+    assert sorted(tree.perm.tolist()) == list(range(n))
+    for l in range(tree.depth + 1):
+        w = n >> l
+        resh = tree.points.reshape(1 << l, w, dim)
+        assert (resh >= tree.box_min[l][:, None, :] - 1e-12).all()
+        assert (resh <= tree.box_max[l][:, None, :] + 1e-12).all()
+
+
+@settings(**SETTINGS)
+@given(depth=st.integers(2, 4), eta=st.floats(0.5, 1.5),
+       seed=st.integers(0, 10**6))
+def test_block_structure_partitions_matrix(depth, eta, seed):
+    """Coupling+dense blocks tile the index space exactly once, for any
+    admissibility parameter and point distribution."""
+    leaf, dim = 4, 2
+    n = leaf * (1 << depth)
+    pts = np.random.default_rng(seed).uniform(-1, 1, (n, dim))
+    tree = build_cluster_tree(pts, leaf)
+    bs = build_block_structure(tree, eta)
+    nl = 1 << depth
+    cover = np.zeros((nl, nl), np.int32)
+    for l in range(depth + 1):
+        scale = 1 << (depth - l)
+        for r, c in zip(bs.s_rows[l], bs.s_cols[l]):
+            cover[r * scale:(r + 1) * scale, c * scale:(c + 1) * scale] += 1
+    for r, c in zip(bs.d_rows, bs.d_cols):
+        cover[r, c] += 1
+    assert (cover == 1).all()
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 10**6), nv=st.integers(1, 4))
+def test_matvec_linearity(seed, nv):
+    """A(ax + by) == a Ax + b Ay for the H^2 operator."""
+    rng = np.random.default_rng(seed)
+    pts = rng.uniform(0, 1, (128, 2))
+    shape, data, tree, _ = construct_h2(pts, exponential_kernel(0.3),
+                                        leaf_size=8, cheb_p=3, eta=0.8)
+    x = jnp.asarray(rng.standard_normal((shape.n, nv)), jnp.float32)
+    y = jnp.asarray(rng.standard_normal((shape.n, nv)), jnp.float32)
+    a, b = 2.0, -0.5
+    lhs = h2_matvec(shape, data, a * x + b * y)
+    rhs = a * h2_matvec(shape, data, x) + b * h2_matvec(shape, data, y)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
+                               rtol=1e-3, atol=1e-3)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 10**6))
+def test_matvec_symmetry(seed):
+    """Symmetric kernel => x^T A y == y^T A x through the H^2 operator."""
+    rng = np.random.default_rng(seed)
+    pts = rng.uniform(0, 1, (64, 2))
+    shape, data, tree, _ = construct_h2(pts, exponential_kernel(0.3),
+                                        leaf_size=8, cheb_p=3, eta=0.8)
+    x = jnp.asarray(rng.standard_normal((shape.n, 1)), jnp.float32)
+    y = jnp.asarray(rng.standard_normal((shape.n, 1)), jnp.float32)
+    xay = float(jnp.vdot(x, h2_matvec(shape, data, y)))
+    yax = float(jnp.vdot(y, h2_matvec(shape, data, x)))
+    assert abs(xay - yax) < 1e-2 * max(abs(xay), 1.0)
+
+
+@settings(**SETTINGS)
+@given(m=st.integers(2, 32), n=st.integers(2, 32), k=st.integers(2, 32),
+       ln=st.integers(1, 8))
+def test_jaxpr_cost_counts_scan_trips(m, n, k, ln):
+    """The static analyzer multiplies scan bodies by trip count — the
+    invariant XLA's cost_analysis violates."""
+    def f(x, ws):
+        def body(h, w):
+            return jnp.tanh(h @ w), None
+        h, _ = jax.lax.scan(body, x, ws)
+        return h
+
+    x = jax.ShapeDtypeStruct((m, k), jnp.float32)
+    ws = jax.ShapeDtypeStruct((ln, k, k), jnp.float32)
+    cost = analyze(f, x, ws)
+    expected_dot = ln * 2 * m * k * k
+    assert cost["flops"] >= expected_dot
+    assert cost["flops"] <= expected_dot * 1.5 + 10 * ln * m * k
+
+
+@settings(**SETTINGS)
+@given(b=st.integers(1, 3), t=st.sampled_from([16, 32]),
+       seed=st.integers(0, 10**6))
+def test_rwkv_chunked_equals_scan_property(b, t, seed):
+    from repro.models.rwkv6 import wkv_scan, wkv_chunked
+    rng = np.random.default_rng(seed)
+    h, n = 2, 4
+    r, k, v = (jnp.asarray(rng.standard_normal((b, t, h, n)), jnp.float32)
+               for _ in range(3))
+    w = jnp.asarray(rng.uniform(0.1, 0.999, (b, t, h, n)), jnp.float32)
+    u = jnp.asarray(rng.standard_normal((h, n)), jnp.float32)
+    s0 = jnp.zeros((b, h, n, n), jnp.float32)
+    y1, st1 = wkv_scan(r, k, v, w, u, s0)
+    y2, st2 = wkv_chunked(r, k, v, w, u, s0, chunk=16)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=2e-3, atol=2e-3)
