@@ -1,0 +1,89 @@
+"""Construction benchmark: host Chebyshev vs on-device randomized sketch.
+
+For each problem size, reports wall time of both construction paths and the
+resulting matvec accuracy against the exact dense kernel matrix (computed
+in chunked f64 on the host so no O(N^2) array is ever materialized).
+
+The sketch path is reported twice: *cold* (includes jit compilation of the
+sampling/rangefinder programs — paid once per (shape, sample-count)
+configuration) and *warm* (re-construction with the same shapes, e.g. a new
+kernel hyper-parameter sweep iteration — the regime the device path is
+for).  On CPU the chunked sampling evaluates each admissible block's
+entries at f32 XLA throughput; on an accelerator the same program is
+memory-bound batched GEMM work (DESIGN.md §5).
+
+Run:  PYTHONPATH=src python -m benchmarks.run --only construction_bench
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.clustering import regular_grid_points
+from repro.core.construction import construct_h2
+from repro.core.kernels_fn import exponential_kernel
+from repro.core.matvec import h2_matvec
+
+
+def _matvec_err(shape, data, tree, kern_np, x: np.ndarray) -> float:
+    """|| A_h2 x - A x || / || A x || with chunked exact dense rows."""
+    y = np.asarray(h2_matvec(shape, data, jnp.asarray(x)))
+    pts = tree.points
+    y_ref = np.zeros((shape.n, x.shape[1]))
+    step = 1024
+    for a in range(0, shape.n, step):
+        blk = kern_np(pts[a:a + step, None, :], pts[None, :, :])
+        y_ref[a:a + step] = blk @ x
+    return float(np.linalg.norm(y - y_ref) / np.linalg.norm(y_ref))
+
+
+def run(out_rows: List[str]) -> None:
+    kern_np = exponential_kernel(0.1)
+    kern_j = exponential_kernel(0.1, xp=jnp)
+    rng = np.random.default_rng(0)
+
+    # N = 4096 (regular grid) and N = 8192 (uniform cloud; the balanced
+    # tree needs N = m * 2^k)
+    sizes = [regular_grid_points(64, 2),
+             np.random.default_rng(42).uniform(0.0, 1.0, (8192, 2))]
+    for pts in sizes:
+        m = 64
+        n = pts.shape[0]
+        x = rng.standard_normal((n, 2)).astype(np.float32)
+
+        t0 = time.perf_counter()
+        cs, cd, ctree, _ = construct_h2(pts, kern_np, leaf_size=m,
+                                        cheb_p=6, eta=0.9)
+        jax.block_until_ready(cd.u_leaf)
+        t_cheb = time.perf_counter() - t0
+        err_cheb = _matvec_err(cs, cd, ctree, kern_np, x)
+
+        opts = dict(tol=1e-4, max_rank=64, seed=0)
+        t0 = time.perf_counter()
+        ss, sd, stree, _ = construct_h2(pts, kern_j, leaf_size=m, cheb_p=0,
+                                        eta=0.9, method="sketch",
+                                        sketch_opts=opts)
+        jax.block_until_ready(sd.u_leaf)
+        t_cold = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        ss, sd, stree, _ = construct_h2(pts, kern_j, leaf_size=m, cheb_p=0,
+                                        eta=0.9, method="sketch",
+                                        sketch_opts=opts)
+        jax.block_until_ready(sd.u_leaf)
+        t_warm = time.perf_counter() - t0
+        err_sk = _matvec_err(ss, sd, stree, kern_np, x)
+
+        mem_c = cs.memory_lowrank() + cs.memory_dense()
+        mem_s = ss.memory_lowrank() + ss.memory_dense()
+        out_rows.append(
+            f"construct_cheb_N{n},{t_cheb*1e6:.0f},"
+            f"err={err_cheb:.2e};ranks={cs.ranks};mem={mem_c}")
+        out_rows.append(
+            f"construct_sketch_N{n},{t_warm*1e6:.0f},"
+            f"cold_us={t_cold*1e6:.0f};err={err_sk:.2e};ranks={ss.ranks};"
+            f"speedup_vs_cheb={t_cheb/t_warm:.2f}x;"
+            f"mem_cheb_over_sketch={mem_c/mem_s:.2f}x")

@@ -13,7 +13,8 @@ import sys
 import traceback
 from typing import List
 
-MODULES = ["accuracy", "hgemv", "compression_bench", "fractional", "lm_step"]
+MODULES = ["accuracy", "hgemv", "compression_bench", "construction_bench",
+           "fractional", "lm_step"]
 
 
 def main() -> None:

@@ -60,16 +60,35 @@ class FractionalProblem:
     h2_tol: float = 1e-6         # compression tolerance for K
     cheb_p: int = 6
     eta: float = 0.9
+    construction: str = "cheb"   # "cheb" (host) | "sketch" (device fast path)
+
+    def _construct(self, pts, kern_np, kern_jnp, m):
+        """One kernel-matrix construction, host-Chebyshev or device-sketch.
+
+        The sketch path is already rank-adaptive (its rangefinder truncates
+        to tolerance), so it needs no separate recompression pass; f32
+        sketching floors the tolerance at 1e-4 (DESIGN.md §5).
+        """
+        if self.construction == "sketch":
+            tol = max(self.h2_tol, 1e-4)
+            return construct_h2(
+                pts, kern_jnp, leaf_size=m, cheb_p=self.cheb_p, eta=self.eta,
+                method="sketch", sketch_opts={"tol": tol}), False
+        if self.construction != "cheb":
+            raise ValueError(f"unknown construction {self.construction!r}")
+        return construct_h2(
+            pts, kern_np, leaf_size=m, cheb_p=self.cheb_p,
+            eta=self.eta), True
 
     def build(self, compress_k: bool = True) -> Dict:
         n = self.n
         h = 2.0 / n
         pts = interior_grid(n)
         m = 16 if n <= 32 else 64
-        kern = fractional_kernel_2d(self.beta)
-        shape, data, tree, bs = construct_h2(
-            pts, kern, leaf_size=m, cheb_p=self.cheb_p, eta=self.eta)
-        if compress_k:
+        (shape, data, tree, bs), needs_compress = self._construct(
+            pts, fractional_kernel_2d(self.beta),
+            fractional_kernel_2d(self.beta, xp=jnp), m)
+        if compress_k and needs_compress:
             shape, data = compress(shape, data, tol=self.h2_tol)
 
         # --- D via Khat @ 1 on the extended grid (Eq. 10) ---
@@ -81,10 +100,9 @@ class FractionalProblem:
             if m_ext > n_ext:
                 m_ext = n_ext
                 break
-        kern_pos = fractional_kernel_2d_positive(self.beta)
-        eshape, edata, etree, _ = construct_h2(
-            pts_ext, kern_pos, leaf_size=m_ext, cheb_p=self.cheb_p,
-            eta=self.eta)
+        (eshape, edata, etree, _), _ = self._construct(
+            pts_ext, fractional_kernel_2d_positive(self.beta),
+            fractional_kernel_2d_positive(self.beta, xp=jnp), m_ext)
         ones = jnp.ones((eshape.n, 1), jnp.float32)
         row_sums = np.asarray(h2_matvec(eshape, edata, ones))[:, 0]
         # undo the tree permutation, restrict to Omega
@@ -251,8 +269,10 @@ def pcg(apply_a, b, precond=None, tol=1e-8, maxiter=200):
 
 
 def solve(n: int, beta: float = 0.75, tol: float = 1e-8,
-          h2_tol: float = 1e-6, use_precond: bool = True) -> Dict:
-    prob = FractionalProblem(n, beta=beta, h2_tol=h2_tol).build()
+          h2_tol: float = 1e-6, use_precond: bool = True,
+          construction: str = "cheb") -> Dict:
+    prob = FractionalProblem(n, beta=beta, h2_tol=h2_tol,
+                             construction=construction).build()
     apply_a = jax.jit(make_operator(prob))
     b = jnp.ones((n * n,), jnp.float32) * (2.0 / n) ** 2   # h^2 * 1
     pre = make_preconditioner(prob) if use_precond else None

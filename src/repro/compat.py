@@ -1,0 +1,37 @@
+"""Version compatibility shims for the JAX API surface.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` to the top-level
+``jax`` namespace (and renamed ``check_rep`` -> ``check_vma``) around 0.5;
+this repo supports both spellings via this module.
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+try:
+    _shard_map = jax.shard_map
+except AttributeError:  # jax < 0.5
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+if "check_vma" in inspect.signature(_shard_map).parameters:
+    shard_map = _shard_map
+else:
+    def shard_map(f, mesh, in_specs, out_specs, check_vma=True, **kw):
+        return _shard_map(f, mesh, in_specs=in_specs, out_specs=out_specs,
+                          check_rep=check_vma, **kw)
+
+def cost_analysis_dict(compiled) -> dict:
+    """``compiled.cost_analysis()`` as a flat dict across jax versions.
+
+    jax < 0.5 returns a one-element list of dicts (one per device);
+    newer versions return the dict directly.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
+
+__all__ = ["shard_map", "cost_analysis_dict"]

@@ -1,13 +1,20 @@
 """Construct a concrete H^2 matrix from (points, kernel, admissibility).
 
-This is the paper's construction path: cluster tree -> dual-tree traversal ->
-Chebyshev interpolation for the low-rank blocks, direct kernel evaluation for
-the dense leaves.  Everything here runs on the host in numpy; the result is
-packaged as (H2Shape, H2Data-on-device).
+Two construction paths share this entry point:
+
+- ``method="cheb"`` (default) — the paper's path: cluster tree -> dual-tree
+  traversal -> Chebyshev interpolation for the low-rank blocks, direct
+  kernel evaluation for the dense leaves.  Runs on the host in numpy; the
+  result is packaged as (H2Shape, H2Data-on-device).
+- ``method="sketch"`` — the on-device randomized sketching path
+  (``repro.sketch``): batched kernel-block sampling + nested-basis
+  rangefinder, everything jitted device code.  Requires a jnp-traceable
+  kernel (``kernels_fn`` factories with ``xp=jnp``); extra options go in
+  ``sketch_opts`` (tol, max_rank, oversample, seed, chunk, backend).
 """
 from __future__ import annotations
 
-from typing import Callable, Tuple
+from typing import Callable, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -20,13 +27,21 @@ from .structure import H2Data, H2Shape
 
 def construct_h2(points: np.ndarray, kernel: Callable, leaf_size: int,
                  cheb_p: int, eta: float, dtype=jnp.float32,
-                 min_level: int = 1) -> Tuple[H2Shape, H2Data, ClusterTree,
-                                              BlockStructure]:
+                 min_level: int = 1, method: str = "cheb",
+                 sketch_opts: Optional[dict] = None
+                 ) -> Tuple[H2Shape, H2Data, ClusterTree, BlockStructure]:
     """Build an H^2 approximation of the kernel matrix K[i,j]=kernel(x_i,x_j).
 
     Returned matrix acts on vectors in *tree (permuted) order*; use
     ``tree.perm`` to map between orderings.
     """
+    if method == "sketch":
+        from repro.sketch.construct import sketch_construct
+        return sketch_construct(points, kernel, leaf_size, eta,
+                                min_level=min_level, dtype=dtype,
+                                **(sketch_opts or {}))
+    if method != "cheb":
+        raise ValueError(f"unknown construction method {method!r}")
     tree = build_cluster_tree(points, leaf_size)
     bs = build_block_structure(tree, eta, min_level=min_level)
     dim = tree.dim

@@ -31,6 +31,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
+
 from .structure import H2Data, H2Shape
 
 
@@ -398,7 +400,7 @@ def make_dist_matvec(dshape: DistH2Shape, mesh: Mesh, axis,
     def fn(d: DistH2Data, x: jax.Array) -> jax.Array:
         return dist_h2_matvec_local(dshape, d, x, axis, comm)
 
-    shmapped = jax.shard_map(
+    shmapped = shard_map(
         fn, mesh=mesh,
         in_specs=(specs, xspec),
         out_specs=xspec,
@@ -640,7 +642,7 @@ def make_dist_compress(dshape: DistH2Shape, mesh: Mesh, axis,
 
     out_specs = dist_specs(
         dataclasses.replace(dshape, ranks=tuple(target_ranks)), axis)
-    shmapped = jax.shard_map(fn, mesh=mesh, in_specs=(specs,),
+    shmapped = shard_map(fn, mesh=mesh, in_specs=(specs,),
                              out_specs=out_specs, check_vma=False)
     return jax.jit(shmapped)
 

@@ -1,7 +1,12 @@
-"""Kernel functions for the paper's test sets (host/numpy evaluation).
+"""Kernel functions for the paper's test sets.
 
 - 2D/3D exponential kernels (spatial statistics / Gaussian process, §6.1)
 - fractional-diffusion kernel with variable diffusivity (§6.4)
+
+Every factory takes an array-namespace argument ``xp``: the default
+``xp=numpy`` serves the host Chebyshev construction path unchanged, while
+``xp=jax.numpy`` yields a jnp-traceable kernel for the on-device sketch
+construction (``repro.sketch``) — same formulas, one implementation.
 """
 from __future__ import annotations
 
@@ -10,46 +15,48 @@ from typing import Callable
 import numpy as np
 
 
-def exponential_kernel(correlation_length: float) -> Callable:
+def exponential_kernel(correlation_length: float, xp=np) -> Callable:
     """exp(-|x-y| / l) — the paper's covariance kernels (§6.1)."""
-    def k(x: np.ndarray, y: np.ndarray) -> np.ndarray:
-        r = np.linalg.norm(x - y, axis=-1)
-        return np.exp(-r / correlation_length)
+    def k(x, y):
+        r = xp.linalg.norm(x - y, axis=-1)
+        return xp.exp(-r / correlation_length)
     return k
 
 
-def bump(x: np.ndarray, c: float, ell: float) -> np.ndarray:
+def bump(x, c: float, ell: float, xp=np):
     """Paper Eq. (7)."""
     r = (x - c) / (ell / 2.0)
-    out = np.zeros_like(x)
-    inside = np.abs(r) < 1.0
-    out[inside] = np.exp(-1.0 / (1.0 - r[inside] ** 2))
-    return out
+    inside = xp.abs(r) < 1.0
+    rsafe = xp.where(inside, r, 0.0)
+    return xp.where(inside, xp.exp(-1.0 / (1.0 - rsafe ** 2)),
+                    xp.zeros_like(x))
 
 
-def diffusivity_2d(x: np.ndarray) -> np.ndarray:
+def diffusivity_2d(x, xp=np):
     """kappa(x) = 1 + f(x1; 0, 1.5) f(x2; 0, 2.0) — paper Eq. (6)."""
-    return 1.0 + bump(x[..., 0], 0.0, 1.5) * bump(x[..., 1], 0.0, 2.0)
+    return 1.0 + bump(x[..., 0], 0.0, 1.5, xp) * bump(x[..., 1], 0.0, 2.0, xp)
 
 
-def fractional_kernel_2d(beta: float) -> Callable:
+def fractional_kernel_2d(beta: float, xp=np) -> Callable:
     """K(x,y) = -2 a(x,y) / |y-x|^(2+2*beta), a = sqrt(kappa(x) kappa(y)).
 
     Paper Eq. (11); the singular diagonal is excluded (zeroed) — the diagonal
     matrix D of Eq. (10) is assembled separately via an H^2 matvec with 1.
     """
-    def k(x: np.ndarray, y: np.ndarray) -> np.ndarray:
-        r = np.linalg.norm(x - y, axis=-1)
-        a = np.sqrt(diffusivity_2d(x) * diffusivity_2d(y))
+    def k(x, y):
+        r = xp.linalg.norm(x - y, axis=-1)
+        a = xp.sqrt(diffusivity_2d(x, xp) * diffusivity_2d(y, xp))
+        # floor r so the masked-out diagonal never divides by zero
+        tiny = 1e-300 if xp is np else 1e-30
         with np.errstate(divide="ignore"):
-            v = -2.0 * a / np.maximum(r, 1e-300) ** (2.0 + 2.0 * beta)
-        return np.where(r == 0.0, 0.0, v)
+            v = -2.0 * a / xp.maximum(r, tiny) ** (2.0 + 2.0 * beta)
+        return xp.where(r == 0.0, xp.zeros_like(r), v)
     return k
 
 
-def fractional_kernel_2d_positive(beta: float) -> Callable:
+def fractional_kernel_2d_positive(beta: float, xp=np) -> Callable:
     """+2a/|y-x|^(2+2b): used for the diagonal D = Khat @ 1 (Eq. 10)."""
-    neg = fractional_kernel_2d(beta)
+    neg = fractional_kernel_2d(beta, xp)
     def k(x, y):
         return -neg(x, y)
     return k

@@ -40,9 +40,11 @@ def upsweep(shape: H2Shape, data: H2Data, x_leaves: jax.Array,
         kl, klm1 = shape.ranks[l], shape.ranks[l - 1]
         nn = shape.nodes(l)
         # children-to-parent: xhat^{l-1}_t = sum_c F_c^T xhat^l_c
+        nv = xhat[l].shape[-1]
         ft = jnp.swapaxes(data.f[l], -1, -2)          # [2**l, k_{l-1}, k_l]
         contrib = _bgemm(ft, xhat[l], backend)        # [2**l, k_{l-1}, nv]
-        xhat[l - 1] = contrib.reshape(nn // 2, 2, klm1, -1).sum(axis=1)
+        # explicit nv (not -1): k_{l-1} may be 0 above the coupling levels
+        xhat[l - 1] = contrib.reshape(nn // 2, 2, klm1, nv).sum(axis=1)
     return xhat
 
 

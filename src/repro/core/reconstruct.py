@@ -62,6 +62,8 @@ def check_orthogonal(shape: H2Shape, data: H2Data, tol: float = 1e-4) -> float:
                                [np.asarray(t) for t in tr])
         for l in range(shape.depth + 1):
             b = bases[l]
+            if b.shape[-1] == 0:      # rank-0 level (sketch path, no coupling)
+                continue
             gram = np.einsum("cwk,cwj->ckj", b, b)
             eye = np.eye(gram.shape[-1])[None]
             worst = max(worst, float(np.abs(gram - eye).max()))

@@ -25,6 +25,8 @@ import jax.numpy as jnp  # noqa: E402
 import numpy as np       # noqa: E402
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P  # noqa: E402
 
+from repro.compat import cost_analysis_dict  # noqa: E402
+
 from repro.configs.base import (ALIASES, ARCHS, SHAPES, get_config,  # noqa: E402
                                 shape_applicable)
 from repro.models import api                      # noqa: E402
@@ -204,7 +206,7 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     compiled = lowered.compile()
     res["compile_s"] = round(time.time() - t0, 1)
 
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis_dict(compiled)
     res["xla_flops"] = float(ca.get("flops", -1))       # loop-undercounted
     res["xla_bytes_accessed"] = float(ca.get("bytes accessed", -1))
     try:

@@ -26,6 +26,7 @@ import numpy as np       # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 from repro.core.clustering import build_cluster_tree, regular_grid_points  # noqa: E402
+from repro.compat import cost_analysis_dict, shard_map  # noqa: E402
 from repro.core.admissibility import build_block_structure  # noqa: E402
 from repro.core.dist import (DistH2Data, DistH2Shape, dist_specs,  # noqa: E402
                              dist_h2_matvec_local, dist_compress_local,
@@ -151,7 +152,7 @@ def lower_h2_cell(kind: str, *, dim: int, nv: int, multi_pod: bool,
             def step(d, x):
                 return dist_h2_matvec_local(ds, d, x, axis, comm)
 
-            fn = jax.shard_map(step, mesh=mesh,
+            fn = shard_map(step, mesh=mesh,
                                in_specs=(specs, P(axis, None)),
                                out_specs=P(axis, None), check_vma=False)
             lowered = jax.jit(fn, in_shardings=(data_sh, x_sh),
@@ -164,7 +165,7 @@ def lower_h2_cell(kind: str, *, dim: int, nv: int, multi_pod: bool,
                 return dist_compress_local(ds, d, tgt, axis)
 
             out_specs = dist_specs(dataclasses.replace(ds, ranks=tgt), axis)
-            fn = jax.shard_map(step, mesh=mesh, in_specs=(specs,),
+            fn = shard_map(step, mesh=mesh, in_specs=(specs,),
                                out_specs=out_specs, check_vma=False)
             out_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), out_specs,
                                   is_leaf=lambda x: isinstance(x, P))
@@ -185,7 +186,7 @@ def lower_h2_cell(kind: str, *, dim: int, nv: int, multi_pod: bool,
     t0 = time.time()
     compiled = lowered.compile()
     res["compile_s"] = round(time.time() - t0, 1)
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis_dict(compiled)
     res["xla_flops"] = float(ca.get("flops", -1))
     hlo = compiled.as_text()
     res["collectives"] = hlo_cost.collective_bytes(hlo)

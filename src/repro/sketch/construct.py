@@ -1,0 +1,182 @@
+"""Driver: on-device randomized-sketch construction of an H^2 matrix.
+
+Pipeline (all jitted batched device code; the host only runs the tree /
+admissibility setup and the integer rank picks):
+
+1. ``sample``     — per coupling level, block-row sketches
+                    ``Y_l[t] = A(t, F_l(t)) Omega`` with counter-based
+                    deterministic Gaussians (sketch/rng.py), evaluated by
+                    chunked batched kernel application (sketch/sample.py).
+                    *Adaptive oversampling*: start with a small sample
+                    budget and double it while the sketch spectrum says the
+                    budget saturates (all singular values above the
+                    tolerance), up to the static ``max_rank + oversample``
+                    so every round is a fixed-shape jitted program.
+2. ``rangefinder``— nested orthonormal bases + per-level ranks from the
+                    sketches (sketch/rangefinder.py).
+3. ``project``    — coupling blocks ``S = U^T A V`` by chunked batched
+                    kernel application against the explicit bases.
+4. ``dense``      — inadmissible leaf blocks by one vmapped evaluation.
+
+Cost note (DESIGN.md §5): sampling evaluates every admissible block's
+entries once, so construction work is O(C_sp N^2 / 2^lmin) flops — not the
+asymptotically optimal FMM-accelerated sampling of Boukaram et al. (2025) —
+but it is embarrassingly batched device work with O(N (r + k)) memory,
+which is the trade this repo's marshaled-batch design wants.  The black-box
+mode (sketch/blackbox.py) replaces step 1/3/4 with probes of a fast matvec.
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.admissibility import BlockStructure, build_block_structure
+from repro.core.clustering import ClusterTree, build_cluster_tree
+from repro.core.structure import H2Data, H2Shape
+
+from . import rng
+from .rangefinder import (build_nested_bases, explicit_bases, pick_rank,
+                          sketch_spectrum)
+from .sample import (eval_dense_blocks, project_coupling_blocks,
+                     sample_block_rows)
+
+
+def adaptive_sketches(sample_fn: Callable[[int], List[Optional[jnp.ndarray]]],
+                      tol: float, max_rank: int, oversample: int,
+                      n_samples0: Optional[int] = None,
+                      backend: str = "jnp"
+                      ) -> Tuple[List[Optional[jnp.ndarray]], int]:
+    """Sample with a growing budget until the sketch resolves the spectrum.
+
+    ``sample_fn(r)`` returns per-level sketches with ``r`` columns each.
+    A level is *saturated* when its sketch still has ``> r - oversample``
+    singular values above ``tol * scale`` — i.e. the trailing-singular-value
+    residual estimate cannot certify the tolerance — in which case the
+    budget is doubled, capped at the static ``max_rank + oversample``.
+    Returns (sketches, n_samples_used).
+    """
+    r_cap = max_rank + oversample
+    r = min(n_samples0 or (min(max_rank, 16) + oversample), r_cap)
+    while True:
+        sketches = sample_fn(r)
+        spectra = [sketch_spectrum(y, backend) for y in sketches
+                   if y is not None and y.shape[0] > 0]
+        if not spectra:                 # no coupling levels: nothing to adapt
+            return sketches, r
+        scale = max(float(s.max()) for s in spectra)
+        needed = max(pick_rank(s, tol * scale, r) for s in spectra)
+        if needed <= max(r - oversample, 1) or r >= r_cap:
+            return sketches, r
+        r = min(2 * r, r_cap)
+
+
+def _rank0_bases(depth: int, leaf_size: int, dtype
+                 ) -> Tuple[jnp.ndarray, List[jnp.ndarray], Tuple[int, ...]]:
+    """Empty basis tree for an operator with no admissible blocks."""
+    u_leaf = jnp.zeros((1 << depth, leaf_size, 0), dtype)
+    e = [jnp.zeros((0, 0, 0), dtype)] + [
+        jnp.zeros((1 << l, 0, 0), dtype) for l in range(1, depth + 1)]
+    return u_leaf, e, tuple([0] * (depth + 1))
+
+
+def _assemble(tree: ClusterTree, bs: BlockStructure, u_leaf, e, ranks,
+              s_list, dense, dtype) -> Tuple[H2Shape, H2Data]:
+    """Package bases/couplings/dense into (H2Shape, H2Data)."""
+    depth = tree.depth
+    sr = [jnp.asarray(bs.s_rows[l], jnp.int32) for l in range(depth + 1)]
+    sc = [jnp.asarray(bs.s_cols[l], jnp.int32) for l in range(depth + 1)]
+    data = H2Data(
+        u_leaf=u_leaf, v_leaf=u_leaf,
+        e=list(e), f=[x for x in e],
+        s=list(s_list), s_rows=sr, s_cols=sc,
+        dense=dense,
+        d_rows=jnp.asarray(bs.d_rows, jnp.int32),
+        d_cols=jnp.asarray(bs.d_cols, jnp.int32))
+    shape = H2Shape(
+        n=tree.n, leaf_size=tree.leaf_size, depth=depth, ranks=tuple(ranks),
+        coupling_counts=bs.coupling_counts(),
+        dense_count=int(bs.d_rows.shape[0]), symmetric=True,
+        row_maxb=bs.row_maxb(), col_maxb=bs.col_maxb())
+    return shape, data
+
+
+def sketch_construct(points: np.ndarray, kernel: Callable, leaf_size: int,
+                     eta: float, *, tol: float = 1e-4, max_rank: int = 64,
+                     oversample: int = 10, n_samples0: Optional[int] = None,
+                     seed: int = 0, min_level: int = 1, dtype=jnp.float32,
+                     backend: str = "jnp", chunk: int = 256
+                     ) -> Tuple[H2Shape, H2Data, ClusterTree, BlockStructure]:
+    """Randomized on-device H^2 construction of the kernel matrix.
+
+    ``kernel`` must be jnp-traceable (``core.kernels_fn`` factories with
+    ``xp=jnp``).  Matches the return signature of ``construct_h2``; the
+    resulting bases are orthonormal by construction, so ``compress(...,
+    assume_orthogonal=True)`` applies directly.
+    """
+    tree = build_cluster_tree(points, leaf_size)
+    bs = build_block_structure(tree, eta, min_level=min_level)
+    depth = tree.depth
+    n = tree.n
+    pts = jnp.asarray(tree.points, dtype)
+    counts = bs.coupling_counts()
+
+    try:                       # fail early with a pointer, not a tracer error
+        import jax
+        d = pts.shape[-1]
+        sds = jax.ShapeDtypeStruct((1, 1, d), dtype)
+        jax.eval_shape(kernel, sds, sds)
+    except jax.errors.TracerArrayConversionError as exc:
+        raise TypeError(
+            "method='sketch' needs a jnp-traceable kernel; build it with "
+            "the jax namespace, e.g. exponential_kernel(l, xp=jax.numpy)"
+        ) from exc
+
+    def sample_fn(r: int) -> List[Optional[jnp.ndarray]]:
+        out: List[Optional[jnp.ndarray]] = []
+        for l in range(depth + 1):
+            if counts[l] == 0:
+                out.append(None)
+                continue
+            nn = 1 << l
+            w = n >> l
+            omega = rng.level_gaussians(seed, l, nn, w, r, dtype)
+            pts_lvl = pts.reshape(nn, w, -1)
+            out.append(sample_block_rows(
+                pts_lvl, jnp.asarray(bs.s_rows[l], jnp.int32),
+                jnp.asarray(bs.s_cols[l], jnp.int32), omega,
+                kernel=kernel, chunk=chunk))
+        return out
+
+    if sum(counts) == 0:
+        # degenerate all-dense H^2 (shallow tree / tight eta): rank-0 bases
+        u_leaf, e, ranks = _rank0_bases(depth, leaf_size, dtype)
+    else:
+        sketches, _ = adaptive_sketches(sample_fn, tol, max_rank, oversample,
+                                        n_samples0, backend)
+        u_leaf, e, ranks = build_nested_bases(sketches, leaf_size, tol,
+                                              max_rank, backend)
+    u_exp = explicit_bases(u_leaf, e)
+
+    s_list = []
+    for l in range(depth + 1):
+        if counts[l] == 0:
+            s_list.append(jnp.zeros((0, ranks[l], ranks[l]), dtype))
+            continue
+        nn = 1 << l
+        w = n >> l
+        pts_lvl = pts.reshape(nn, w, -1)
+        s_list.append(project_coupling_blocks(
+            pts_lvl, jnp.asarray(bs.s_rows[l], jnp.int32),
+            jnp.asarray(bs.s_cols[l], jnp.int32), u_exp[l], u_exp[l],
+            kernel=kernel, chunk=chunk))
+
+    pts_leaf = pts.reshape(1 << depth, leaf_size, -1)
+    dense = eval_dense_blocks(pts_leaf,
+                              jnp.asarray(bs.d_rows, jnp.int32),
+                              jnp.asarray(bs.d_cols, jnp.int32),
+                              kernel=kernel).astype(dtype)
+
+    shape, data = _assemble(tree, bs, u_leaf, e, ranks, s_list, dense, dtype)
+    return shape, data, tree, bs

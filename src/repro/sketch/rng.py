@@ -1,0 +1,54 @@
+"""Counting-based deterministic random sampling for the sketch constructor.
+
+Every Gaussian test block is derived from a *counter*, never from carried
+PRNG state: the key for node ``i`` of stream ``stream`` is
+
+    fold_in(fold_in(PRNGKey(seed), stream), i)
+
+(threefry counter derivation).  Consequences that the construction relies on:
+
+- a node's test matrix is identical no matter how the nodes are batched,
+  chunked, or re-ordered on device, so per-block partial products can be
+  segment-summed into block-row sketches ``Y_t = sum_s A(t,s) Omega_s``
+  with every block seeing the *same* ``Omega_s``;
+- re-running construction with the same ``seed`` is bit-reproducible
+  (tested in tests/test_sketch.py);
+- samples are a pure function of ``(seed, level, node, shape)`` — note
+  that a *larger* budget is a fresh draw, not a superset of a smaller one
+  (JAX keys the whole block), which is why every adaptive-oversampling
+  round resamples its sketches from scratch.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def stream_key(seed: int, stream: int) -> jax.Array:
+    """Base key of a named sampling stream (one per tree level)."""
+    return jax.random.fold_in(jax.random.PRNGKey(seed), stream)
+
+
+@functools.partial(jax.jit, static_argnames=("rows", "cols", "dtype"))
+def node_gaussians(base_key: jax.Array, node_ids: jax.Array, *, rows: int,
+                   cols: int, dtype=jnp.float32) -> jax.Array:
+    """Per-node Gaussian test matrices, [len(node_ids), rows, cols].
+
+    ``node_ids`` indexes the counter: ``out[i] = N(0,1)`` keyed by
+    ``fold_in(base_key, node_ids[i])`` — batch-order independent.
+    """
+    def one(i):
+        return jax.random.normal(jax.random.fold_in(base_key, i),
+                                 (rows, cols), dtype)
+    return jax.vmap(one)(node_ids)
+
+
+def level_gaussians(seed: int, level: int, n_nodes: int, rows: int,
+                    cols: int, dtype=jnp.float32) -> jax.Array:
+    """Test matrices for every node of a tree level: [n_nodes, rows, cols]."""
+    base = stream_key(seed, level)
+    ids = jnp.arange(n_nodes, dtype=jnp.uint32)
+    return node_gaussians(base, ids, rows=rows, cols=cols, dtype=dtype)
