@@ -5,11 +5,21 @@ CPU measures the single-device batched pipeline (real timings); the
 multi-GPU scaling columns are model-derived from the same quantities the
 paper reports: per-level compute is embarrassingly parallel below the
 C-level, communication = the halo/gather volumes from ``matvec_comm_bytes``.
+
+``h2_matvec`` is already jitted with static (shape, backend), so it is
+called directly — no per-iteration ``jax.jit`` re-wraps (those retrace on
+every call and pollute timings).  Machine-readable records (µs, model
+GFLOP/s, N, nv, backend) are appended to ``records`` for
+``benchmarks/run.py`` to serialize as ``BENCH_hgemv.json``.
+
+Set ``REPRO_BENCH_QUICK=1`` (or ``benchmarks.run --quick``) to run only the
+N=4096 single-device sweep — the CI smoke configuration.
 """
 from __future__ import annotations
 
+import os
 import time
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -30,8 +40,7 @@ def _build(side: int, dim: int = 2, m: int = 32, p: int = 6,
 
 
 def time_fn(fn, *args, reps: int = 10) -> float:
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
+    jax.block_until_ready(fn(*args))          # one warmup (compile) call
     ts = []
     for _ in range(reps):
         t0 = time.perf_counter()
@@ -41,28 +50,52 @@ def time_fn(fn, *args, reps: int = 10) -> float:
     return float(np.mean(ts[1:-1])) if len(ts) > 2 else float(np.mean(ts))
 
 
-def run(out_rows: List[str]) -> None:
+def _record(records: Optional[List[Dict]], name: str, sec: float, n: int,
+            nv: int, flops: int, backend: str = "jnp") -> None:
+    if records is not None:
+        records.append({
+            "name": name, "us": round(sec * 1e6, 1),
+            "model_gflops": round(flops / sec / 1e9, 3),
+            "N": n, "nv": nv, "backend": backend,
+        })
+
+
+def run(out_rows: List[str], records: Optional[List[Dict]] = None) -> None:
     rng = np.random.default_rng(0)
+    quick = os.environ.get("REPRO_BENCH_QUICK", "0") == "1"
+
     # --- Fig 9 analogue: throughput vs nv at fixed N (single device) ---
     shape, data, tree, bs = _build(64)        # N=4096
     for nv in (1, 4, 16, 64):
         x = jnp.asarray(rng.standard_normal((shape.n, nv)), jnp.float32)
-        fn = jax.jit(lambda d, xx: h2_matvec(shape, d, xx))
-        sec = time_fn(fn, data, x)
+        sec = time_fn(h2_matvec, shape, data, x)
         fl = h2_matvec_flops(shape, nv)
         out_rows.append(
             f"hgemv_nv{nv},{sec*1e6:.1f},gflops={fl/sec/1e9:.2f}"
             f";N={shape.n};Csp={bs.sparsity_constant()}")
+        _record(records, f"hgemv_nv{nv}", sec, shape.n, nv, fl)
+    if quick:
+        return
 
     # --- O(N) scaling of matvec time (paper: linear complexity) ---
     times = []
     for side in (32, 64, 128):
         s2, d2, _, _ = _build(side)
         x = jnp.asarray(rng.standard_normal((s2.n, 1)), jnp.float32)
-        fn = jax.jit(lambda dd, xx: h2_matvec(s2, dd, xx))
-        sec = time_fn(fn, d2, x, reps=6)
+        sec = time_fn(h2_matvec, s2, d2, x, reps=6)
         times.append((s2.n, sec))
         out_rows.append(f"hgemv_N{s2.n},{sec*1e6:.1f},")
+        _record(records, f"hgemv_N{s2.n}", sec, s2.n, 1,
+                h2_matvec_flops(s2, 1))
+        if side == 128:
+            # the tracked perf point: N=16384, nv=16 (acceptance trajectory)
+            x16 = jnp.asarray(rng.standard_normal((s2.n, 16)), jnp.float32)
+            sec16 = time_fn(h2_matvec, s2, d2, x16)
+            fl16 = h2_matvec_flops(s2, 16)
+            out_rows.append(
+                f"hgemv_N{s2.n}_nv16,{sec16*1e6:.1f},"
+                f"gflops={fl16/sec16/1e9:.2f}")
+            _record(records, f"hgemv_N{s2.n}_nv16", sec16, s2.n, 16, fl16)
     # growth factor per 4x N should be ~4 (linear), not ~16 (quadratic)
     g1 = times[1][1] / times[0][1]
     g2 = times[2][1] / times[1][1]

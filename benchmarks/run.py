@@ -1,17 +1,24 @@
 """Benchmark harness: one module per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--only hgemv,compression_bench]
+                                            [--quick] [--json-dir DIR]
 
-Prints ``name,us_per_call,derived`` CSV rows.  The roofline table (dry-run
-derived, 256/512-device) is produced separately by ``benchmarks/roofline.py``
-from ``dryrun_results.json``.
+Prints ``name,us_per_call,derived`` CSV rows.  Modules whose ``run``
+accepts a second argument also emit machine-readable records, written as
+``BENCH_<module>.json`` (a list of dicts; for hgemv: µs, model GFLOP/s, N,
+nv, backend) — the perf trajectory consumed by CI and future PRs.  The
+roofline table (dry-run derived, 256/512-device) is produced separately by
+``benchmarks/roofline.py`` from ``dryrun_results.json``.
 """
 from __future__ import annotations
 
 import argparse
+import inspect
+import json
+import os
 import sys
 import traceback
-from typing import List
+from typing import Dict, List
 
 MODULES = ["accuracy", "hgemv", "compression_bench", "construction_bench",
            "fractional", "lm_step"]
@@ -21,7 +28,13 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated module subset")
+    ap.add_argument("--quick", action="store_true",
+                    help="smoke configuration (sets REPRO_BENCH_QUICK=1)")
+    ap.add_argument("--json-dir", default=".",
+                    help="directory for BENCH_<module>.json files")
     args, _ = ap.parse_known_args()
+    if args.quick:
+        os.environ["REPRO_BENCH_QUICK"] = "1"
     mods = args.only.split(",") if args.only else MODULES
 
     rows: List[str] = []
@@ -31,9 +44,18 @@ def main() -> None:
         try:
             mod = __import__(f"benchmarks.{name}", fromlist=["run"])
             before = len(rows)
-            mod.run(rows)
+            records: List[Dict] = []
+            if len(inspect.signature(mod.run).parameters) >= 2:
+                mod.run(rows, records)
+            else:
+                mod.run(rows)
             for r in rows[before:]:
                 print(r, flush=True)
+            if records:
+                path = os.path.join(args.json_dir, f"BENCH_{name}.json")
+                with open(path, "w") as f:
+                    json.dump(records, f, indent=1)
+                print(f"# wrote {path}", flush=True)
         except Exception:
             failed.append(name)
             traceback.print_exc()

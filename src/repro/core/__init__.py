@@ -9,7 +9,8 @@ Public API:
     make_dist_matvec      shard_map distributed matvec
     make_dist_compress    shard_map distributed recompression
 """
-from .structure import H2Shape, H2Data, abstract_data, shape_of    # noqa
+from .structure import (H2Shape, H2Data, CouplingPlan, abstract_data,  # noqa
+                        build_coupling_plan, remarshal, shape_of)
 from .construction import construct_h2, dense_reference           # noqa
 from .matvec import h2_matvec, h2_matvec_flops                    # noqa
 from .orthogonalize import orthogonalize                          # noqa

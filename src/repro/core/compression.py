@@ -26,7 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .structure import H2Data, H2Shape
+from .structure import H2Data, H2Shape, remarshal, stack_blocks_by_plan
 
 
 def _batched_qr_r(a: jax.Array, backend: str) -> jax.Array:
@@ -67,7 +67,7 @@ def compression_weights(shape: H2Shape, data: H2Data, backend: str = "jnp"
     depth = shape.depth
     ranks = shape.ranks
 
-    def sweep(transfers, s_blocks_fn, idx_fn, maxb_tuple):
+    def sweep(transfers, stacked_fn, maxb_tuple):
         r: List[jax.Array] = [None] * (depth + 1)
         r[0] = jnp.zeros((1, ranks[0], ranks[0]), data.u_leaf.dtype)
         for l in range(1, depth + 1):
@@ -78,9 +78,7 @@ def compression_weights(shape: H2Shape, data: H2Data, backend: str = "jnp"
             par = jnp.einsum("cij,ckj->cik", rpar, transfers[l])
             pieces = [par]
             if shape.coupling_counts[l] > 0 and maxb_tuple[l] > 0:
-                blk = s_blocks_fn(l)                       # [nb, k_l, k_l]
-                idx = idx_fn(l)
-                pieces.append(_stack_blocks(blk, idx, nn, maxb_tuple[l]))
+                pieces.append(stacked_fn(l))        # [nn, maxb*k_l, k_l]
             stack = jnp.concatenate(pieces, axis=1)
             if stack.shape[1] < kl:                        # ensure R is [k_l, k_l]
                 pad = jnp.zeros((nn, kl - stack.shape[1], kl), stack.dtype)
@@ -88,22 +86,29 @@ def compression_weights(shape: H2Shape, data: H2Data, backend: str = "jnp"
             r[l] = _batched_qr_r(stack, backend)[..., :kl, :]
         return r
 
-    # Row tree: blocks grouped by row, entries S^T (paper Eq. 4).
-    def s_t(l):
-        return jnp.swapaxes(data.s[l], -1, -2)
-
-    ru = sweep(data.e, s_t, lambda l: data.s_rows[l], shape.row_maxb)
+    # Row tree: blocks grouped by row, entries S^T (paper Eq. 4).  The
+    # row-marshaled buffer [nn, k, maxb*k] transposes into exactly the
+    # stacked layout the sweep wants — the plan replaces the scatter in
+    # ``_stack_blocks``.
+    def stacked_row(l):
+        if data.s_mar is not None:
+            return jnp.swapaxes(data.s_mar[l], -1, -2)
+        return _stack_blocks(jnp.swapaxes(data.s[l], -1, -2),
+                             data.s_rows[l], shape.nodes(l),
+                             shape.row_maxb[l])
 
     # Column tree: blocks grouped by column, entries S (un-transposed).
-    # s_cols is sorted within rows only; sort by column for grouping.
-    def s_by_col(l):
+    def stacked_col(l):
+        if data.plan is not None:
+            return stack_blocks_by_plan(data.s[l], data.plan.cblk[l],
+                                        shape.nodes(l))
         order = jnp.argsort(data.s_cols[l], stable=True)
-        return jnp.take(data.s[l], order, axis=0)
+        return _stack_blocks(jnp.take(data.s[l], order, axis=0),
+                             jnp.sort(data.s_cols[l]), shape.nodes(l),
+                             shape.col_maxb[l])
 
-    def col_idx(l):
-        return jnp.sort(data.s_cols[l])
-
-    rv = sweep(data.f, s_by_col, col_idx, shape.col_maxb)
+    ru = sweep(data.e, stacked_row, shape.row_maxb)
+    rv = sweep(data.f, stacked_col, shape.col_maxb)
     return ru, rv
 
 
@@ -163,11 +168,14 @@ def truncate(shape: H2Shape, data: H2Data, ru: List[jax.Array],
                         coupling_counts=tuple(new_counts),
                         dense_count=shape.dense_count,
                         symmetric=shape.symmetric,
-                        row_maxb=shape.row_maxb, col_maxb=shape.col_maxb)
-    new_data = H2Data(u_leaf=u_leaf, v_leaf=v_leaf, e=e_new, f=f_new,
-                      s=s_new, s_rows=list(data.s_rows),
-                      s_cols=list(data.s_cols), dense=data.dense,
-                      d_rows=data.d_rows, d_cols=data.d_cols)
+                        row_maxb=shape.row_maxb, col_maxb=shape.col_maxb,
+                        dense_maxb=shape.dense_maxb)
+    new_data = remarshal(H2Data(
+        u_leaf=u_leaf, v_leaf=v_leaf, e=e_new, f=f_new,
+        s=s_new, s_rows=list(data.s_rows),
+        s_cols=list(data.s_cols), dense=data.dense,
+        d_rows=data.d_rows, d_cols=data.d_cols,
+        plan=data.plan, dense_mar=data.dense_mar), dense=False)
     return new_shape, new_data
 
 
@@ -235,7 +243,8 @@ def compress(shape: H2Shape, data: H2Data, tol: Optional[float] = None,
         shape = H2Shape(n=s2.n, leaf_size=s2.leaf_size, depth=s2.depth,
                         ranks=s2.ranks, coupling_counts=s2.coupling_counts,
                         dense_count=s2.dense_count, symmetric=s2.symmetric,
-                        row_maxb=shape.row_maxb, col_maxb=shape.col_maxb)
+                        row_maxb=shape.row_maxb, col_maxb=shape.col_maxb,
+                        dense_maxb=shape.dense_maxb)
     ru, rv = compression_weights(shape, data, backend)
     if target_ranks is None:
         if tol is None:

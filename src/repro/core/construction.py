@@ -22,7 +22,7 @@ import numpy as np
 from .admissibility import BlockStructure, build_block_structure
 from .chebyshev import (build_chebyshev_bases, build_coupling, build_dense)
 from .clustering import ClusterTree, build_cluster_tree
-from .structure import H2Data, H2Shape
+from .structure import H2Data, H2Shape, build_coupling_plan, remarshal
 
 
 def construct_h2(points: np.ndarray, kernel: Callable, leaf_size: int,
@@ -65,13 +65,16 @@ def construct_h2(points: np.ndarray, kernel: Callable, leaf_size: int,
         e_list.append(jnp.asarray(e_np[l], dtype))
 
     u_leaf = jnp.asarray(u_leaf_np, dtype)
-    data = H2Data(
+    plan = build_coupling_plan(depth, bs.s_rows, bs.s_cols,
+                               bs.d_rows, bs.d_cols)
+    data = remarshal(H2Data(
         u_leaf=u_leaf, v_leaf=u_leaf,
         e=e_list, f=[x for x in e_list],
         s=s_list, s_rows=sr_list, s_cols=sc_list,
         dense=jnp.asarray(dense_np, dtype),
         d_rows=jnp.asarray(bs.d_rows, jnp.int32),
-        d_cols=jnp.asarray(bs.d_cols, jnp.int32))
+        d_cols=jnp.asarray(bs.d_cols, jnp.int32),
+        plan=plan))
 
     shape = H2Shape(
         n=tree.n, leaf_size=leaf_size, depth=depth,
@@ -79,7 +82,8 @@ def construct_h2(points: np.ndarray, kernel: Callable, leaf_size: int,
         coupling_counts=bs.coupling_counts(),
         dense_count=int(bs.d_rows.shape[0]),
         symmetric=True,
-        row_maxb=bs.row_maxb(), col_maxb=bs.col_maxb())
+        row_maxb=bs.row_maxb(), col_maxb=bs.col_maxb(),
+        dense_maxb=int(plan.dblk.shape[0]) >> depth)
     return shape, data, tree, bs
 
 

@@ -33,7 +33,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
 
-from .structure import H2Data, H2Shape
+from .structure import H2Data, H2Shape, build_slot_plan, marshal_blocks
 
 
 # ---------------------------------------------------------------------------
@@ -58,6 +58,7 @@ class DistH2Shape:
     dense_radius: int
     row_maxb: Tuple[int, ...]             # max blocks/row (global levels 0..depth)
     symmetric: bool = True
+    dense_maxb: int = 1                   # max dense blocks per leaf row
 
     @property
     def leaves_per_dev(self) -> int:
@@ -76,6 +77,15 @@ class DistH2Data:
     """Runtime arrays; leading axis of *_br arrays is sharded over block rows.
 
     Branch lists are indexed ``l - lc``; top lists are indexed ``l``.
+
+    The per-device marshaling plan (DESIGN.md §3.5) mirrors the
+    single-device one: ``pb_blk``/``pb_col`` are the branch levels'
+    ``slot -> local slab block`` / ``slot -> GLOBAL source node`` arrays
+    over the local ``nloc x maxb`` slot layout, ``s_br_mar`` the
+    row-marshaled block values ``[P*nloc, k, maxb*k]`` (zero padding), so
+    every device's coupling phase is one gather + one batched GEMM —
+    no segment-sum inside ``shard_map``.  Top levels and dense leaves get
+    the same treatment (replicated / sharded respectively).
     """
     u_leaf: jax.Array                     # [P*nl_loc, m, k]
     v_leaf: jax.Array
@@ -92,20 +102,34 @@ class DistH2Data:
     dense: jax.Array                      # [P*nbd_max, m, m]
     d_rows: jax.Array
     d_cols: jax.Array
+    # marshaling plan + marshaled value buffers
+    pb_blk: List[jax.Array]               # [P*nloc_l*maxb_l] int32 (nbmax = pad)
+    pb_col: List[jax.Array]               # [P*nloc_l*maxb_l] int32 global col
+    s_br_mar: List[jax.Array]             # [P*nloc_l, k, maxb_l*k]
+    pt_blk: List[jax.Array]               # l=0..lc-1 (replicated)
+    pt_col: List[jax.Array]
+    s_top_mar: List[jax.Array]            # [2**l, k, maxb_l*k]
+    pd_col: jax.Array                     # [P*nl_loc*dmaxb] int32 global col
+    dense_mar: jax.Array                  # [P*nl_loc, m, dmaxb*m]
 
     def tree_flatten(self):
         return ((self.u_leaf, self.v_leaf, tuple(self.e_br), tuple(self.f_br),
                  tuple(self.s_br), tuple(self.s_br_rows), tuple(self.s_br_cols),
                  tuple(self.e_top), tuple(self.f_top), tuple(self.s_top),
                  tuple(self.s_top_rows), tuple(self.s_top_cols),
-                 self.dense, self.d_rows, self.d_cols), None)
+                 self.dense, self.d_rows, self.d_cols,
+                 tuple(self.pb_blk), tuple(self.pb_col), tuple(self.s_br_mar),
+                 tuple(self.pt_blk), tuple(self.pt_col), tuple(self.s_top_mar),
+                 self.pd_col, self.dense_mar), None)
 
     @classmethod
     def tree_unflatten(cls, aux, ch):
-        (u, v, eb, fb, sb, sbr, sbc, et, ft, st, str_, stc, de, dr, dc) = ch
+        (u, v, eb, fb, sb, sbr, sbc, et, ft, st, str_, stc, de, dr, dc,
+         pbb, pbc, sbm, ptb, ptc, stm, pdc, dm) = ch
         return cls(u, v, list(eb), list(fb), list(sb), list(sbr), list(sbc),
                    list(et), list(ft), list(st), list(str_), list(stc),
-                   de, dr, dc)
+                   de, dr, dc, list(pbb), list(pbc), list(sbm),
+                   list(ptb), list(ptc), list(stm), pdc, dm)
 
 
 def dist_specs(dshape: DistH2Shape, axis) -> DistH2Data:
@@ -120,7 +144,10 @@ def dist_specs(dshape: DistH2Shape, axis) -> DistH2Data:
         s_br=[sh] * nbr, s_br_rows=[sh] * nbr, s_br_cols=[sh] * nbr,
         e_top=[rep] * (lc + 1), f_top=[rep] * (lc + 1),
         s_top=[rep] * lc, s_top_rows=[rep] * lc, s_top_cols=[rep] * lc,
-        dense=sh, d_rows=sh, d_cols=sh)
+        dense=sh, d_rows=sh, d_cols=sh,
+        pb_blk=[sh] * nbr, pb_col=[sh] * nbr, s_br_mar=[sh] * nbr,
+        pt_blk=[rep] * lc, pt_col=[rep] * lc, s_top_mar=[rep] * lc,
+        pd_col=sh, dense_mar=sh)
 
 
 # ---------------------------------------------------------------------------
@@ -147,23 +174,39 @@ def partition_h2(shape: H2Shape, data: H2Data, p: int
         counts = np.bincount(owner, minlength=p)
         nbmax = max(int(counts.max()) if counts.size else 0, 1)
         k = shape.ranks[l]
-        sv = np.zeros((p * nbmax, k, k), vals.dtype if vals.size else np.float32)
+        dt = vals.dtype if vals.size else np.float32
+        sv = np.zeros((p * nbmax, k, k), dt)
         sr = np.zeros(p * nbmax, np.int32)
         sc = np.zeros(p * nbmax, np.int32)
+        # per-device marshaling plan over the local nloc x maxb slot layout
+        nrow = np.bincount(rows, minlength=1 << l)
+        maxb = max(int(nrow.max()) if rows.size else 0, 1)
+        pb = np.full(p * nloc * maxb, nbmax, np.int32)       # nbmax = pad
+        pc = np.zeros(p * nloc * maxb, np.int32)
+        sv_mar = np.zeros((p * nloc, maxb, k, k), dt)
         # default cols to the owner's first node (no spurious halo traffic)
         for d in range(p):
             sc[d * nbmax:(d + 1) * nbmax] = d * nloc
+            pc[d * nloc * maxb:(d + 1) * nloc * maxb] = d * nloc
         fill = np.zeros(p, np.int64)
+        rowfill = np.zeros(p * nloc, np.int64)
         for b in range(rows.shape[0]):
             d = int(owner[b])
             slot = d * nbmax + int(fill[d])
             sv[slot] = vals[b]
             sr[slot] = int(rows[b]) - d * nloc
             sc[slot] = int(cols[b])
+            r_g = int(rows[b])                  # == d*nloc + local row
+            j = int(rowfill[r_g])
+            pb[r_g * maxb + j] = int(fill[d])   # local slab block index
+            pc[r_g * maxb + j] = int(cols[b])
+            sv_mar[r_g, j] = vals[b]
+            rowfill[r_g] += 1
             fill[d] += 1
+        sv_mar = np.moveaxis(sv_mar, 1, 2).reshape(p * nloc, k, maxb * k)
         col_owner = cols >> shift
         rad = int(np.abs(col_owner - owner).max()) if rows.size else 0
-        return sv, sr, sc, nbmax, rad
+        return sv, sr, sc, nbmax, rad, pb, pc, sv_mar
 
     e_br = [np.zeros((p, 0, 0), np.float32)]
     f_br = [np.zeros((p, 0, 0), np.float32)]
@@ -172,13 +215,17 @@ def partition_h2(shape: H2Shape, data: H2Data, p: int
         f_br.append(np.asarray(data.f[l]))
 
     s_br, s_br_r, s_br_c, br_counts, br_rad = [], [], [], [], []
+    pb_blk, pb_col, s_br_mar = [], [], []
     for l in range(lc, depth + 1):
-        sv, sr, sc, nbmax, rad = split_level(l)
+        sv, sr, sc, nbmax, rad, pb, pc, sv_mar = split_level(l)
         s_br.append(sv)
         s_br_r.append(sr)
         s_br_c.append(sc)
         br_counts.append(nbmax)
         br_rad.append(rad)
+        pb_blk.append(pb)
+        pb_col.append(pc)
+        s_br_mar.append(sv_mar)
 
     # dense leaves: same treatment at the leaf level
     rows = np.asarray(data.d_rows)
@@ -192,17 +239,39 @@ def partition_h2(shape: H2Shape, data: H2Data, p: int
     dv = np.zeros((p * nbd, m, m), vals.dtype)
     dr = np.zeros(p * nbd, np.int32)
     dc = np.zeros(p * nbd, np.int32)
+    nrow = np.bincount(rows, minlength=1 << depth)
+    dmaxb = max(int(nrow.max()) if rows.size else 0, 1)
+    pd_col = np.zeros(p * nloc * dmaxb, np.int32)
+    dv_mar = np.zeros((p * nloc, dmaxb, m, m), vals.dtype)
     for d in range(p):
         dc[d * nbd:(d + 1) * nbd] = d * nloc
+        pd_col[d * nloc * dmaxb:(d + 1) * nloc * dmaxb] = d * nloc
     fill = np.zeros(p, np.int64)
+    rowfill = np.zeros(p * nloc, np.int64)
     for b in range(rows.shape[0]):
         d = int(owner[b])
         slot = d * nbd + int(fill[d])
         dv[slot] = vals[b]
         dr[slot] = int(rows[b]) - d * nloc
         dc[slot] = int(cols[b])
+        r_g = int(rows[b])
+        j = int(rowfill[r_g])
+        pd_col[r_g * dmaxb + j] = int(cols[b])
+        dv_mar[r_g, j] = vals[b]
+        rowfill[r_g] += 1
         fill[d] += 1
+    dv_mar = np.moveaxis(dv_mar, 1, 2).reshape(p * nloc, m, dmaxb * m)
     d_rad = int(np.abs((cols >> shift) - owner).max()) if rows.size else 0
+
+    # replicated top levels: the global slot plan + marshaled blocks
+    pt_blk, pt_col, s_top_mar = [], [], []
+    for l in range(lc):
+        b_, c_, _, _ = build_slot_plan(np.asarray(data.s_rows[l]),
+                                       np.asarray(data.s_cols[l]), 1 << l)
+        pt_blk.append(jnp.asarray(b_))
+        pt_col.append(jnp.asarray(c_))
+        s_top_mar.append(marshal_blocks(jnp.asarray(np.asarray(data.s[l])),
+                                        jnp.asarray(b_), 1 << l))
 
     dshape = DistH2Shape(
         n=shape.n, leaf_size=m, depth=depth, ranks=shape.ranks, p=p, lc=lc,
@@ -210,7 +279,7 @@ def partition_h2(shape: H2Shape, data: H2Data, p: int
         top_counts=tuple(shape.coupling_counts[:lc]),
         dense_count=nbd, dense_radius=d_rad,
         row_maxb=shape.row_maxb or tuple([0] * (depth + 1)),
-        symmetric=shape.symmetric)
+        symmetric=shape.symmetric, dense_maxb=dmaxb)
 
     ddata = DistH2Data(
         u_leaf=jnp.asarray(np.asarray(data.u_leaf)),
@@ -227,7 +296,13 @@ def partition_h2(shape: H2Shape, data: H2Data, p: int
         s_top=[jnp.asarray(np.asarray(data.s[l])) for l in range(lc)],
         s_top_rows=[jnp.asarray(np.asarray(data.s_rows[l])) for l in range(lc)],
         s_top_cols=[jnp.asarray(np.asarray(data.s_cols[l])) for l in range(lc)],
-        dense=jnp.asarray(dv), d_rows=jnp.asarray(dr), d_cols=jnp.asarray(dc))
+        dense=jnp.asarray(dv), d_rows=jnp.asarray(dr), d_cols=jnp.asarray(dc),
+        pb_blk=[jnp.asarray(x) for x in pb_blk],
+        pb_col=[jnp.asarray(x) for x in pb_col],
+        s_br_mar=[jnp.asarray(x) for x in s_br_mar],
+        pt_blk=pt_blk, pt_col=pt_col, s_top_mar=s_top_mar,
+        pd_col=jnp.asarray(pd_col),
+        dense_mar=jnp.asarray(dv_mar))
     return dshape, ddata
 
 
@@ -286,7 +361,13 @@ def _local_upsweep(dshape: DistH2Shape, d: DistH2Data, x_leaves, axis):
 
 def _coupling_phase(dshape: DistH2Shape, d: DistH2Data, xhat, xhat_top,
                     axis, comm: str):
-    """yhat at branch levels (local) + top levels (replicated)."""
+    """yhat at branch levels (local) + top levels (replicated).
+
+    Single dispatch per level (DESIGN.md §3.5): the halo/allgather sources
+    are gathered by the per-device slot plan into ``[nloc, maxb*k, nv]``
+    and contracted against the row-marshaled blocks in one batched GEMM —
+    the slot reduction rides the contraction, no scatter inside shard_map.
+    """
     depth, lc, p = dshape.depth, dshape.lc, dshape.p
     nv = xhat[depth].shape[-1]
     yhat: Dict[int, jax.Array] = {}
@@ -297,7 +378,12 @@ def _coupling_phase(dshape: DistH2Shape, d: DistH2Data, xhat, xhat_top,
         i = l - lc
         nloc = dshape.nodes_local(l)
         k = dshape.ranks[l]
-        cols = d.s_br_cols[i]
+        if k == 0:
+            yhat[l] = jnp.zeros((nloc, k, nv), xhat[depth].dtype)
+            continue
+        s_mar = d.s_br_mar[i]                 # [nloc, k, maxb*k] per device
+        maxb = s_mar.shape[-1] // k
+        cols = d.pb_col[i]                    # [nloc*maxb] global col plan
         own_start = me * nloc
         if comm == "allgather" and p > 1:
             xg_full = jax.lax.all_gather(xhat[l], axis, tiled=True)
@@ -315,20 +401,20 @@ def _coupling_phase(dshape: DistH2Shape, d: DistH2Data, xhat, xhat_top,
             halo = _halo_exchange(src, axis, rad, p)
             idx = cols - own_start + rad * nloc
             xg = jnp.take(halo, idx, axis=0).astype(xhat[l].dtype)
-        prod = jnp.einsum("bij,bjv->biv", d.s_br[i], xg)
-        yhat[l] = jax.ops.segment_sum(prod, d.s_br_rows[i],
-                                      num_segments=nloc)
+        yhat[l] = jnp.einsum("nkj,njv->nkv", s_mar,
+                             xg.reshape(nloc, maxb * k, nv))
 
     for l in range(lc):
         nn = 1 << l
         k = dshape.ranks[l]
-        if dshape.top_counts[l] == 0:
+        if dshape.top_counts[l] == 0 or k == 0:
             yhat_top[l] = jnp.zeros((nn, k, nv), xhat[depth].dtype)
             continue
-        xs = jnp.take(xhat_top[l], d.s_top_cols[l], axis=0)
-        prod = jnp.einsum("bij,bjv->biv", d.s_top[l], xs)
-        yhat_top[l] = jax.ops.segment_sum(prod, d.s_top_rows[l],
-                                          num_segments=nn)
+        s_mar = d.s_top_mar[l]
+        maxb = s_mar.shape[-1] // k
+        xg = jnp.take(xhat_top[l], d.pt_col[l], axis=0)
+        yhat_top[l] = jnp.einsum("nkj,njv->nkv", s_mar,
+                                 xg.reshape(nn, maxb * k, nv))
     return yhat, yhat_top
 
 
@@ -359,19 +445,23 @@ def _dense_phase(dshape: DistH2Shape, d: DistH2Data, x_leaves, axis,
                  comm: str):
     p = dshape.p
     nloc = dshape.leaves_per_dev
+    m = dshape.leaf_size
+    nv = x_leaves.shape[-1]
     me = jax.lax.axis_index(axis)
+    d_mar = d.dense_mar                       # [nloc, m, dmaxb*m] per device
+    dmaxb = d_mar.shape[-1] // m
     if comm == "allgather" and p > 1:
         xg_full = jax.lax.all_gather(x_leaves, axis, tiled=True)
-        xg = jnp.take(xg_full, d.d_cols, axis=0)
+        xg = jnp.take(xg_full, d.pd_col, axis=0)
     else:
         rad = dshape.dense_radius if p > 1 else 0
         src = jax.lax.optimization_barrier(x_leaves.astype(jnp.bfloat16)) \
             if comm == "ppermute-bf16" else x_leaves
         halo = _halo_exchange(src, axis, rad, p)
-        idx = d.d_cols - me * nloc + rad * nloc
+        idx = d.pd_col - me * nloc + rad * nloc
         xg = jnp.take(halo, idx, axis=0).astype(x_leaves.dtype)
-    prod = jnp.einsum("bij,bjv->biv", d.dense, xg)
-    return jax.ops.segment_sum(prod, d.d_rows, num_segments=nloc)
+    return jnp.einsum("nkj,njv->nkv", d_mar,
+                      xg.reshape(nloc, dmaxb * m, nv))
 
 
 def dist_h2_matvec_local(dshape: DistH2Shape, d: DistH2Data, x: jax.Array,
@@ -475,18 +565,39 @@ def dist_orthogonalize_local(dshape: DistH2Shape, d: DistH2Data, axis
         rc = jnp.take(r_top[l], d.s_top_cols[l], axis=0)
         s_top_new.append(jnp.einsum("bij,bjk,blk->bil", rr, d.s_top[l], rc))
 
-    return DistH2Data(
+    return _with_remarshaled(dshape, d, DistH2Data(
         u_leaf=q_leaf, v_leaf=q_leaf,
         e_br=new_e_br, f_br=new_e_br,
         s_br=s_br_new, s_br_rows=d.s_br_rows, s_br_cols=d.s_br_cols,
         e_top=new_e_top, f_top=new_e_top,
         s_top=s_top_new, s_top_rows=d.s_top_rows, s_top_cols=d.s_top_cols,
-        dense=d.dense, d_rows=d.d_rows, d_cols=d.d_cols)
+        dense=d.dense, d_rows=d.d_rows, d_cols=d.d_cols,
+        pb_blk=d.pb_blk, pb_col=d.pb_col, s_br_mar=d.s_br_mar,
+        pt_blk=d.pt_blk, pt_col=d.pt_col, s_top_mar=d.s_top_mar,
+        pd_col=d.pd_col, dense_mar=d.dense_mar))
 
 
 def _stack_local(blocks, idx, n_nodes, maxb):
     from .compression import _stack_blocks
     return _stack_blocks(blocks, idx, n_nodes, maxb)
+
+
+def _with_remarshaled(dshape: DistH2Shape, d_old: DistH2Data,
+                      d_new: DistH2Data) -> DistH2Data:
+    """Refresh the marshaled S buffers from rewritten block values.
+
+    Per-device gathers by the (unchanged) slot plans; call inside
+    shard_map after a pass that rewrites ``s_br``/``s_top`` (the
+    orthogonalization / compression S updates).  Dense is untouched.
+    """
+    depth, lc = dshape.depth, dshape.lc
+    s_br_mar = [marshal_blocks(d_new.s_br[l - lc], d_old.pb_blk[l - lc],
+                               dshape.nodes_local(l))
+                for l in range(lc, depth + 1)]
+    s_top_mar = [marshal_blocks(d_new.s_top[l], d_old.pt_blk[l], 1 << l)
+                 for l in range(lc)]
+    return dataclasses.replace(d_new, s_br_mar=s_br_mar,
+                               s_top_mar=s_top_mar)
 
 
 def dist_compress_local(dshape: DistH2Shape, d: DistH2Data,
@@ -624,13 +735,16 @@ def dist_compress_local(dshape: DistH2Shape, d: DistH2Data,
         pc = jnp.take(p_top[l], d.s_top_cols[l], axis=0)
         s_top_new.append(jnp.einsum("brk,bkj,bsj->brs", pr, d.s_top[l], pc))
 
-    return DistH2Data(
+    return _with_remarshaled(dshape, d, DistH2Data(
         u_leaf=new_leaf, v_leaf=new_leaf,
         e_br=new_e_br, f_br=new_e_br,
         s_br=s_br_new, s_br_rows=d.s_br_rows, s_br_cols=d.s_br_cols,
         e_top=new_e_top, f_top=new_e_top,
         s_top=s_top_new, s_top_rows=d.s_top_rows, s_top_cols=d.s_top_cols,
-        dense=d.dense, d_rows=d.d_rows, d_cols=d.d_cols)
+        dense=d.dense, d_rows=d.d_rows, d_cols=d.d_cols,
+        pb_blk=d.pb_blk, pb_col=d.pb_col, s_br_mar=d.s_br_mar,
+        pt_blk=d.pt_blk, pt_col=d.pt_col, s_top_mar=d.s_top_mar,
+        pd_col=d.pd_col, dense_mar=d.dense_mar))
 
 
 def make_dist_compress(dshape: DistH2Shape, mesh: Mesh, axis,

@@ -1,14 +1,21 @@
 """H^2 matrix-(multi)vector product: upsweep, coupling multiply, downsweep.
 
 Single-device version (paper §3, Algorithms 1/4/6).  Every tree level is one
-batched contraction; the coupling phase is a block-sparse MV realized as
-gather -> batched GEMM -> segment-sum, which is the conflict-free-batch idea
-of the paper expressed as a TPU-friendly segmented reduction.
+batched contraction.  The block-sparse phases (coupling, dense leaves) are
+*single-dispatch*: the construction-time marshaling plan (DESIGN.md §3.5)
+lays every level out as conflict-free ``rows x maxb`` slots, so each phase
+is one gather of the source vectors followed by ONE batched GEMM whose
+contraction axis folds the per-row slot reduction — no scatter-add anywhere
+in the hot path.  Hand-built data without a plan falls back to the seed
+gather -> batched GEMM -> segment-sum pipeline (kept as the reference).
 
 ``backend`` selects the batched-GEMM implementation:
   - "jnp":    jnp.einsum (XLA batched dot) — default, used on CPU
-  - "pallas": the Pallas TPU kernel (kernels/batched_gemm.py); on CPU it runs
-              in interpret mode (tests only)
+  - "pallas": Pallas TPU kernels; the block-sparse phases use the
+              gather-fused scalar-prefetch kernel (kernels/coupling_mv.py)
+              reading S straight from its natural layout, the dense
+              contractions use kernels/batched_gemm.py.  On CPU both run
+              in interpret mode (tests only).
 """
 from __future__ import annotations
 
@@ -48,24 +55,57 @@ def upsweep(shape: H2Shape, data: H2Data, x_leaves: jax.Array,
     return xhat
 
 
+def marshaled_multiply(blocks_mar: jax.Array, x: jax.Array,
+                       col: jax.Array, backend: str = "jnp") -> jax.Array:
+    """One marshaled block-sparse MV: ``y_r = sum_j B[r, j] x[col[r, j]]``.
+
+    ``blocks_mar``: [rows, k1, maxb*k2] row-marshaled blocks (zero padding),
+    ``x``: [nodes, k2, nv] source vectors, ``col``: [rows*maxb] slot plan.
+    The slot reduction rides the GEMM contraction — single dispatch, no
+    scatter.  Shared by the single-device matvec, the per-device phases in
+    ``core.dist``, and the sketch sampler.
+    """
+    rows, k1, mk2 = blocks_mar.shape
+    nv = x.shape[-1]
+    xg = jnp.take(x, col, axis=0).reshape(rows, mk2, nv)
+    return _bgemm(blocks_mar, xg, backend)
+
+
 def coupling_multiply(shape: H2Shape, data: H2Data,
                       xhat: List[jax.Array], backend: str = "jnp"
                       ) -> List[jax.Array]:
-    """yhat[l] = S^l xhat[l] — a block-sparse MV at every level."""
+    """yhat[l] = S^l xhat[l] — a block-sparse MV at every level.
+
+    With a marshaling plan each level is a single dispatch: the jnp path
+    contracts the row-marshaled ``s_mar`` against plan-gathered ``xhat``;
+    the pallas path runs the gather-fused kernel on S's natural layout.
+    """
     depth = shape.depth
     nv = xhat[depth].shape[-1]
     yhat: List[jax.Array] = []
     for l in range(depth + 1):
         nn = shape.nodes(l)
         kl = shape.ranks[l]
-        if shape.coupling_counts[l] == 0:
+        if shape.coupling_counts[l] == 0 or kl == 0:
             yhat.append(jnp.zeros((nn, kl, nv), xhat[depth].dtype))
             continue
-        xs = jnp.take(xhat[l], data.s_cols[l], axis=0)       # [nb, k, nv]
-        prod = _bgemm(data.s[l], xs, backend)                # [nb, k, nv]
-        yhat.append(jax.ops.segment_sum(
-            prod, data.s_rows[l], num_segments=nn,
-            indices_are_sorted=True))
+        if data.plan is None:
+            # reference path: gather -> batched GEMM -> segmented scatter
+            xs = jnp.take(xhat[l], data.s_cols[l], axis=0)   # [nb, k, nv]
+            prod = _bgemm(data.s[l], xs, backend)            # [nb, k, nv]
+            yhat.append(jax.ops.segment_sum(
+                prod, data.s_rows[l], num_segments=nn,
+                indices_are_sorted=True))
+            continue
+        if backend == "pallas" and kl > 0:
+            from repro.kernels import ops as kops
+            maxb = data.plan.sblk[l].shape[0] // nn
+            yhat.append(kops.coupling_mv(
+                data.s[l], xhat[l], data.plan.sblk[l], data.plan.scol[l],
+                data.plan.scnt[l], maxb=maxb))
+        else:
+            yhat.append(marshaled_multiply(data.s_mar[l], xhat[l],
+                                           data.plan.scol[l], backend))
     return yhat
 
 
@@ -85,14 +125,22 @@ def downsweep(shape: H2Shape, data: H2Data, yhat: List[jax.Array],
 
 def dense_multiply(shape: H2Shape, data: H2Data, x_leaves: jax.Array,
                    backend: str = "jnp") -> jax.Array:
-    """A_de x — block-sparse MV over the dense leaves."""
+    """A_de x — block-sparse MV over the dense leaves (single dispatch)."""
     if shape.dense_count == 0:
         return jnp.zeros_like(x_leaves)
-    xs = jnp.take(x_leaves, data.d_cols, axis=0)             # [nbd, m, nv]
-    prod = _bgemm(data.dense, xs, backend)
-    return jax.ops.segment_sum(prod, data.d_rows,
-                               num_segments=shape.n_leaves,
-                               indices_are_sorted=True)
+    if data.plan is None:
+        xs = jnp.take(x_leaves, data.d_cols, axis=0)         # [nbd, m, nv]
+        prod = _bgemm(data.dense, xs, backend)
+        return jax.ops.segment_sum(prod, data.d_rows,
+                                   num_segments=shape.n_leaves,
+                                   indices_are_sorted=True)
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+        maxb = data.plan.dblk.shape[0] // shape.n_leaves
+        return kops.coupling_mv(data.dense, x_leaves, data.plan.dblk,
+                                data.plan.dcol, data.plan.dcnt, maxb=maxb)
+    return marshaled_multiply(data.dense_mar, x_leaves, data.plan.dcol,
+                              backend)
 
 
 @functools.partial(jax.jit, static_argnames=("shape", "backend"))

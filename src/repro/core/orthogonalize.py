@@ -16,7 +16,7 @@ from typing import List, Tuple
 import jax
 import jax.numpy as jnp
 
-from .structure import H2Data, H2Shape, shape_of
+from .structure import H2Data, H2Shape, remarshal, shape_of
 
 
 def _batched_qr(a: jax.Array, backend: str) -> Tuple[jax.Array, jax.Array]:
@@ -74,6 +74,10 @@ def orthogonalize(shape: H2Shape, data: H2Data, backend: str = "jnp"
         rl = jnp.take(ru[l], data.s_rows[l], axis=0)        # [nb, k', k]
         rr = jnp.take(rv[l], data.s_cols[l], axis=0)
         s_new.append(jnp.einsum("bij,bjk,blk->bil", rl, data.s[l], rr))
-    return H2Data(u_leaf=u_leaf, v_leaf=v_leaf, e=e_new, f=f_new, s=s_new,
-                  s_rows=list(data.s_rows), s_cols=list(data.s_cols),
-                  dense=data.dense, d_rows=data.d_rows, d_cols=data.d_cols)
+    # structure (and therefore the plan) is unchanged; S values are new,
+    # so the marshaled buffers are regathered from the plan
+    return remarshal(H2Data(
+        u_leaf=u_leaf, v_leaf=v_leaf, e=e_new, f=f_new, s=s_new,
+        s_rows=list(data.s_rows), s_cols=list(data.s_cols),
+        dense=data.dense, d_rows=data.d_rows, d_cols=data.d_cols,
+        plan=data.plan, dense_mar=data.dense_mar), dense=False)

@@ -13,6 +13,16 @@ Naming follows the paper (Table 1):
   E, F   interlevel transfer matrices of U / V
   S      coupling-matrix tree (one block-sparse matrix per level)
   A_de   dense leaf blocks at the finest level
+
+Marshaling plan (DESIGN.md §3.5): block-sparse phases are dispatched through
+a ``CouplingPlan`` — per level, the conflict-free padded slot layout
+``rows x maxb`` as precomputed int32 ``slot -> S-block`` / ``slot -> source
+node`` index arrays plus per-row slot counts, built once at construction.
+``H2Data`` additionally carries the *row-marshaled* value buffers
+``s_mar[l]: [rows, k, maxb*k]`` (zero blocks in padding slots), so the
+whole coupling phase of the matvec is a single gather + batched GEMM with
+the slot reduction folded into the contraction — no scatter-add anywhere.
+The dense-leaf phase gets the same treatment (``dense_mar``).
 """
 from __future__ import annotations
 
@@ -36,9 +46,10 @@ class H2Shape:
     dense_count: int            # number of dense leaf blocks
     symmetric: bool = True      # V tree == U tree structure (kernel symmetric)
     # static max blocks per block-row / block-column at each level (for the
-    # compression stacking; bounded by the sparsity constant C_sp)
+    # compression stacking and the marshaling plan; bounded by C_sp)
     row_maxb: Optional[Tuple[int, ...]] = None
     col_maxb: Optional[Tuple[int, ...]] = None
+    dense_maxb: Optional[int] = None   # max dense blocks per leaf block-row
 
     @property
     def n_leaves(self) -> int:
@@ -67,11 +78,132 @@ class H2Shape:
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
+class CouplingPlan:
+    """Static-per-structure marshaling plan for the block-sparse phases.
+
+    Row-slot layout: block row ``r`` of level ``l`` owns slots
+    ``r*maxb .. r*maxb + maxb - 1`` (``maxb = row_maxb[l]``); slot ``j``
+    within a row is the conflict-free batch index of the paper.  Padding
+    slots carry the sentinel block index ``nb`` (one past the end) so a
+    ``mode="fill"`` gather zeroes them; their source-node index is 0.
+    ``cblk`` is the column-grouped twin (blocks ordered by block column)
+    used by the compression column sweep; its shape encodes ``col_maxb``.
+
+    All arrays are int32 and ride through jit as runtime inputs; the slot
+    counts per row make the padded layout self-describing (``shape_of``
+    recovers ``row_maxb``/``col_maxb``/``dense_maxb`` from the shapes).
+    """
+
+    sblk: List[jax.Array]   # [2**l * row_maxb_l] slot -> S-block index (nb = pad)
+    scol: List[jax.Array]   # [2**l * row_maxb_l] slot -> xhat source node
+    scnt: List[jax.Array]   # [2**l] blocks per block-row
+    cblk: List[jax.Array]   # [2**l * col_maxb_l] column-grouped slot -> S-block
+    dblk: jax.Array         # [2**depth * dense_maxb] slot -> dense block (nbd = pad)
+    dcol: jax.Array         # [2**depth * dense_maxb] slot -> x source leaf
+    dcnt: jax.Array         # [2**depth] dense blocks per leaf row
+
+    def tree_flatten(self):
+        return ((tuple(self.sblk), tuple(self.scol), tuple(self.scnt),
+                 tuple(self.cblk), self.dblk, self.dcol, self.dcnt), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        (sb, sc, sn, cb, db, dc, dn) = leaves
+        return cls(list(sb), list(sc), list(sn), list(cb), db, dc, dn)
+
+
+def build_slot_plan(rows: np.ndarray, cols: np.ndarray, n_rows: int
+                    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, int]:
+    """One level's padded slot layout from a (row-sorted) block list.
+
+    Returns ``(blk, col, cnt, maxb)`` with ``blk``/``col`` of shape
+    ``[n_rows * maxb]``; padding slots get ``blk = len(rows)`` (sentinel,
+    one past the last block) and ``col = 0``.
+    """
+    rows = np.asarray(rows)
+    cols = np.asarray(cols)
+    cnt = np.bincount(rows, minlength=n_rows).astype(np.int32) if rows.size \
+        else np.zeros(n_rows, np.int32)
+    maxb = int(cnt.max()) if rows.size else 0
+    blk = np.full(n_rows * maxb, rows.shape[0], np.int32)
+    col = np.zeros(n_rows * maxb, np.int32)
+    if rows.size:
+        starts = np.searchsorted(rows, np.arange(n_rows))
+        pos = np.arange(rows.shape[0]) - starts[rows]
+        slots = rows * maxb + pos
+        blk[slots] = np.arange(rows.shape[0], dtype=np.int32)
+        col[slots] = cols
+    return blk, col, cnt, maxb
+
+
+def build_coupling_plan(depth: int, s_rows: Sequence[np.ndarray],
+                        s_cols: Sequence[np.ndarray], d_rows: np.ndarray,
+                        d_cols: np.ndarray) -> CouplingPlan:
+    """Host-side plan construction from the admissibility block lists.
+
+    ``s_rows[l]``/``s_cols[l]`` must be sorted by (row, col) — the layout
+    ``build_block_structure`` emits.  The column-grouped half of the plan is
+    derived by a stable re-sort (used by the compression column sweep and to
+    make ``col_maxb`` recoverable from shapes alone).
+    """
+    sblk, scol, scnt, cblk = [], [], [], []
+    for l in range(depth + 1):
+        nn = 1 << l
+        rows = np.asarray(s_rows[l])
+        cols = np.asarray(s_cols[l])
+        b, c, n, _ = build_slot_plan(rows, cols, nn)
+        sblk.append(jnp.asarray(b))
+        scol.append(jnp.asarray(c))
+        scnt.append(jnp.asarray(n))
+        order = np.lexsort((rows, cols))
+        b, _, _, _ = build_slot_plan(cols[order], rows[order], nn)
+        # re-map column-grouped slot -> original block index
+        pad = b == order.shape[0]
+        b = order.astype(np.int32)[np.minimum(b, max(order.shape[0] - 1, 0))] \
+            if order.size else b
+        b = np.where(pad, np.int32(order.shape[0]), b)
+        cblk.append(jnp.asarray(b))
+    db, dc, dn, _ = build_slot_plan(np.asarray(d_rows), np.asarray(d_cols),
+                                    1 << depth)
+    return CouplingPlan(sblk=sblk, scol=scol, scnt=scnt, cblk=cblk,
+                        dblk=jnp.asarray(db), dcol=jnp.asarray(dc),
+                        dcnt=jnp.asarray(dn))
+
+
+def marshal_blocks(blocks: jax.Array, blk: jax.Array, n_rows: int
+                   ) -> jax.Array:
+    """Gather ``[nb, k1, k2]`` blocks into the row-marshaled stacked form
+    ``[n_rows, k1, maxb*k2]`` (zero padding slots; ``blk`` sentinel = nb)."""
+    k1, k2 = blocks.shape[-2], blocks.shape[-1]
+    maxb = blk.shape[0] // max(n_rows, 1)
+    g = jnp.take(blocks, blk, axis=0, mode="fill", fill_value=0)
+    return jnp.moveaxis(g.reshape(n_rows, maxb, k1, k2), 1, 2
+                        ).reshape(n_rows, k1, maxb * k2)
+
+
+def stack_blocks_by_plan(blocks: jax.Array, blk: jax.Array, n_rows: int
+                         ) -> jax.Array:
+    """Gather ``[nb, k1, k2]`` blocks into the vertically stacked form
+    ``[n_rows, maxb*k1, k2]`` (the compression-sweep layout)."""
+    k1, k2 = blocks.shape[-2], blocks.shape[-1]
+    maxb = blk.shape[0] // max(n_rows, 1)
+    g = jnp.take(blocks, blk, axis=0, mode="fill", fill_value=0)
+    return g.reshape(n_rows, maxb * k1, k2)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
 class H2Data:
     """Runtime arrays of an H^2 matrix (a JAX pytree).
 
     Per-level lists are indexed by level ``l``; entries for levels that carry
     no data are zero-size arrays (kept so the pytree structure is static).
+
+    ``plan`` plus the marshaled buffers ``s_mar``/``dense_mar`` are present
+    on every constructed operator (``plan=None`` only for hand-built data,
+    which falls back to the gather/segment-sum reference path in the
+    matvec).  The marshaled buffers are *derived* from ``s``/``dense`` —
+    refresh them with ``remarshal`` after any pass that rewrites S.
     """
 
     u_leaf: jax.Array                 # [2**depth, m, k_leaf]
@@ -84,22 +216,53 @@ class H2Data:
     dense: jax.Array                  # [nbd, m, m]
     d_rows: jax.Array                 # [nbd] int32
     d_cols: jax.Array                 # [nbd] int32
+    plan: Optional[CouplingPlan] = None
+    s_mar: Optional[List[jax.Array]] = None   # [2**l, k_l, maxb_l*k_l]
+    dense_mar: Optional[jax.Array] = None     # [2**depth, m, dense_maxb*m]
 
     def tree_flatten(self):
         leaves = (self.u_leaf, self.v_leaf, tuple(self.e), tuple(self.f),
                   tuple(self.s), tuple(self.s_rows), tuple(self.s_cols),
-                  self.dense, self.d_rows, self.d_cols)
+                  self.dense, self.d_rows, self.d_cols, self.plan,
+                  tuple(self.s_mar) if self.s_mar is not None else None,
+                  self.dense_mar)
         return leaves, None
 
     @classmethod
     def tree_unflatten(cls, aux, leaves):
-        (u, v, e, f, s, sr, sc, de, dr, dc) = leaves
+        (u, v, e, f, s, sr, sc, de, dr, dc, plan, sm, dm) = leaves
         return cls(u, v, list(e), list(f), list(s), list(sr), list(sc),
-                   de, dr, dc)
+                   de, dr, dc, plan,
+                   list(sm) if sm is not None else None, dm)
+
+
+def remarshal(data: H2Data, dense: bool = True) -> H2Data:
+    """Refresh the marshaled S (and optionally dense) buffers from the
+    block lists.
+
+    Cheap device gathers; call after any pass that rewrites ``s`` or
+    ``dense`` in place of the construction-time values (orthogonalize,
+    truncate).  No-op for plan-less data.
+    """
+    if data.plan is None:
+        return data
+    depth = len(data.e) - 1
+    s_mar = [marshal_blocks(data.s[l], data.plan.sblk[l], 1 << l)
+             for l in range(depth + 1)]
+    dense_mar = marshal_blocks(data.dense, data.plan.dblk,
+                               data.u_leaf.shape[0]) if dense or \
+        data.dense_mar is None else data.dense_mar
+    return dataclasses.replace(data, s_mar=s_mar, dense_mar=dense_mar)
 
 
 def shape_of(data: H2Data, leaf_size: int, symmetric: bool = True) -> H2Shape:
-    """Recover the static H2Shape from an H2Data pytree (works on SDS too)."""
+    """Recover the static H2Shape from an H2Data pytree (works on SDS too).
+
+    The marshaling plan makes the padded slot layout self-describing:
+    ``row_maxb``/``col_maxb``/``dense_maxb`` are recovered from the plan
+    array shapes, so shapes round-tripped through ``shape_of`` can drive
+    the compression stacking and the plan-based dispatch.
+    """
     depth = len(data.e) - 1
     ranks = [0] * (depth + 1)
     ranks[depth] = data.u_leaf.shape[-1]
@@ -107,13 +270,26 @@ def shape_of(data: H2Data, leaf_size: int, symmetric: bool = True) -> H2Shape:
         ranks[l - 1] = data.e[l].shape[-1]
     counts = tuple(int(data.s[l].shape[0]) for l in range(depth + 1))
     n = data.u_leaf.shape[0] * leaf_size
+    row_maxb = col_maxb = dense_maxb = None
+    if data.plan is not None:
+        row_maxb = tuple(int(data.plan.sblk[l].shape[0]) >> l
+                         for l in range(depth + 1))
+        col_maxb = tuple(int(data.plan.cblk[l].shape[0]) >> l
+                         for l in range(depth + 1))
+        dense_maxb = int(data.plan.dblk.shape[0]) >> depth
     return H2Shape(n=n, leaf_size=leaf_size, depth=depth, ranks=tuple(ranks),
                    coupling_counts=counts, dense_count=int(data.dense.shape[0]),
-                   symmetric=symmetric)
+                   symmetric=symmetric, row_maxb=row_maxb, col_maxb=col_maxb,
+                   dense_maxb=dense_maxb)
 
 
 def abstract_data(shape: H2Shape, dtype=jnp.float32) -> H2Data:
-    """ShapeDtypeStruct stand-ins for every array — used by the dry-run."""
+    """ShapeDtypeStruct stand-ins for every array — used by the dry-run.
+
+    If the shape carries the marshaling statics (``row_maxb`` etc.) the
+    plan and marshaled buffers are described too, so dry-run cost models
+    see the single-dispatch program the real matvec runs.
+    """
     sds = jax.ShapeDtypeStruct
     m, kq = shape.leaf_size, shape.ranks[shape.depth]
     nl = shape.n_leaves
@@ -129,12 +305,32 @@ def abstract_data(shape: H2Shape, dtype=jnp.float32) -> H2Data:
         s.append(sds((nb, shape.ranks[l], shape.ranks[l]), dtype))
         sr.append(sds((nb,), jnp.int32))
         sc.append(sds((nb,), jnp.int32))
+    plan = s_mar = dense_mar = None
+    if shape.row_maxb is not None and shape.col_maxb is not None and \
+            shape.dense_maxb is not None:
+        i32 = jnp.int32
+        plan = CouplingPlan(
+            sblk=[sds((shape.nodes(l) * shape.row_maxb[l],), i32)
+                  for l in range(shape.depth + 1)],
+            scol=[sds((shape.nodes(l) * shape.row_maxb[l],), i32)
+                  for l in range(shape.depth + 1)],
+            scnt=[sds((shape.nodes(l),), i32) for l in range(shape.depth + 1)],
+            cblk=[sds((shape.nodes(l) * shape.col_maxb[l],), i32)
+                  for l in range(shape.depth + 1)],
+            dblk=sds((nl * shape.dense_maxb,), i32),
+            dcol=sds((nl * shape.dense_maxb,), i32),
+            dcnt=sds((nl,), i32))
+        s_mar = [sds((shape.nodes(l), shape.ranks[l],
+                      shape.row_maxb[l] * shape.ranks[l]), dtype)
+                 for l in range(shape.depth + 1)]
+        dense_mar = sds((nl, m, shape.dense_maxb * m), dtype)
     return H2Data(
         u_leaf=sds((nl, m, kq), dtype), v_leaf=sds((nl, m, kq), dtype),
         e=e, f=f, s=s, s_rows=sr, s_cols=sc,
         dense=sds((shape.dense_count, m, m), dtype),
         d_rows=sds((shape.dense_count,), jnp.int32),
-        d_cols=sds((shape.dense_count,), jnp.int32))
+        d_cols=sds((shape.dense_count,), jnp.int32),
+        plan=plan, s_mar=s_mar, dense_mar=dense_mar)
 
 
 def zeros_data(shape: H2Shape, dtype=jnp.float32) -> H2Data:

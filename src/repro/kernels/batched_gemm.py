@@ -48,6 +48,8 @@ def batched_gemm(a: jax.Array, b: jax.Array, *, bm: int = 128, bn: int = 128,
     """
     nb, m, kdim = a.shape
     _, _, n = b.shape
+    if 0 in (nb, m, n, kdim):      # zero-size batch/dims (e.g. rank-0 levels)
+        return jnp.zeros((nb, m, n), a.dtype)
     bm, bn, bk = _pick(bm, m), _pick(bn, n), _pick(bk, kdim)
     # grid must tile exactly; fall back to full dims if not divisible
     if m % bm:

@@ -31,5 +31,7 @@ def batched_svd(a: jax.Array, **kw):
     return _bs.batched_svd(a, interpret=INTERPRET, **kw)
 
 
-def coupling_mv(s_pad: jax.Array, xg_pad: jax.Array, *, maxb: int, **kw):
-    return _cm.coupling_mv(s_pad, xg_pad, maxb=maxb, interpret=INTERPRET, **kw)
+def coupling_mv(s: jax.Array, x: jax.Array, blk: jax.Array, col: jax.Array,
+                cnt: jax.Array, *, maxb: int, **kw):
+    return _cm.coupling_mv(s, x, blk, col, cnt, maxb=maxb,
+                           interpret=INTERPRET, **kw)

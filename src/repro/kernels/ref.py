@@ -18,8 +18,15 @@ def batched_svd(a: jax.Array):
     return u, s, vt
 
 
-def coupling_mv(s_pad: jax.Array, xg_pad: jax.Array, *, maxb: int) -> jax.Array:
-    total, k, _ = s_pad.shape
-    rows = total // maxb
-    prod = jnp.einsum("bij,bjv->biv", s_pad, xg_pad)
-    return prod.reshape(rows, maxb, k, -1).sum(axis=1)
+def coupling_mv(s: jax.Array, x: jax.Array, blk: jax.Array, col: jax.Array,
+                cnt: jax.Array, *, maxb: int) -> jax.Array:
+    """Plan-based block-sparse MV oracle: take-by-plan -> batched einsum ->
+    reshape-sum (padding slots masked by the per-row counts)."""
+    rows = cnt.shape[0]
+    k1 = s.shape[-2]
+    sg = jnp.take(s, blk, axis=0, mode="fill", fill_value=0)
+    xg = jnp.take(x, col, axis=0)
+    prod = jnp.einsum("bij,bjv->biv", sg, xg)
+    mask = (jnp.arange(maxb, dtype=cnt.dtype)[None, :] < cnt[:, None])
+    prod = prod.reshape(rows, maxb, k1, -1) * mask[:, :, None, None]
+    return prod.sum(axis=1)

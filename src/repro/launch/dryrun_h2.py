@@ -92,7 +92,8 @@ def synth_dist_shape(p: int, depth: int, m: int, k: int, stats: Dict
         ranks=tuple([k] * (depth + 1)), p=p, lc=lc,
         br_counts=tuple(br_counts), br_radius=tuple(br_rad),
         top_counts=top_counts, dense_count=nbd, dense_radius=1,
-        row_maxb=tuple(row_maxb), symmetric=True)
+        row_maxb=tuple(row_maxb), symmetric=True,
+        dense_maxb=max(int(np.ceil(stats["dense_per_row"])), 1))
 
 
 def abstract_dist_data(ds: DistH2Shape, dtype=jnp.float32) -> DistH2Data:
@@ -117,6 +118,23 @@ def abstract_dist_data(ds: DistH2Shape, dtype=jnp.float32) -> DistH2Data:
         st_r.append(sds((ds.top_counts[l],), jnp.int32))
         st_c.append(sds((ds.top_counts[l],), jnp.int32))
     nbd = p * ds.dense_count
+    # marshaling plan + marshaled buffers (same static sizing rules as
+    # partition_h2: per-level maxb >= 1 so empty levels stay well-formed)
+    i32 = jnp.int32
+    pb_blk, pb_col, s_br_mar = [], [], []
+    for i, l in enumerate(range(ds.lc, ds.depth + 1)):
+        nloc = ds.nodes_local(l)
+        maxb = max(ds.row_maxb[l], 1)
+        pb_blk.append(sds((p * nloc * maxb,), i32))
+        pb_col.append(sds((p * nloc * maxb,), i32))
+        s_br_mar.append(sds((p * nloc, k, maxb * k), dtype))
+    pt_blk, pt_col, s_top_mar = [], [], []
+    for l in range(ds.lc):
+        maxb = ds.row_maxb[l]
+        pt_blk.append(sds(((1 << l) * maxb,), i32))
+        pt_col.append(sds(((1 << l) * maxb,), i32))
+        s_top_mar.append(sds((1 << l, k, maxb * k), dtype))
+    nl_loc_tot = nl
     return DistH2Data(
         u_leaf=sds((nl, m, k), dtype), v_leaf=sds((nl, m, k), dtype),
         e_br=e_br, f_br=list(e_br),
@@ -124,7 +142,11 @@ def abstract_dist_data(ds: DistH2Shape, dtype=jnp.float32) -> DistH2Data:
         e_top=e_top, f_top=list(e_top),
         s_top=s_top, s_top_rows=st_r, s_top_cols=st_c,
         dense=sds((nbd, m, m), dtype), d_rows=sds((nbd,), jnp.int32),
-        d_cols=sds((nbd,), jnp.int32))
+        d_cols=sds((nbd,), jnp.int32),
+        pb_blk=pb_blk, pb_col=pb_col, s_br_mar=s_br_mar,
+        pt_blk=pt_blk, pt_col=pt_col, s_top_mar=s_top_mar,
+        pd_col=sds((nl_loc_tot * ds.dense_maxb,), i32),
+        dense_mar=sds((nl_loc_tot, m, ds.dense_maxb * m), dtype))
 
 
 def lower_h2_cell(kind: str, *, dim: int, nv: int, multi_pod: bool,

@@ -34,7 +34,8 @@ import numpy as np
 
 from repro.core.admissibility import BlockStructure, build_block_structure
 from repro.core.clustering import ClusterTree, build_cluster_tree
-from repro.core.structure import H2Data, H2Shape
+from repro.core.structure import (CouplingPlan, H2Data, H2Shape,
+                                  build_coupling_plan, remarshal)
 
 from . import rng
 from .rangefinder import (build_nested_bases, explicit_bases, pick_rank,
@@ -82,23 +83,29 @@ def _rank0_bases(depth: int, leaf_size: int, dtype
 
 
 def _assemble(tree: ClusterTree, bs: BlockStructure, u_leaf, e, ranks,
-              s_list, dense, dtype) -> Tuple[H2Shape, H2Data]:
+              s_list, dense, dtype,
+              plan: Optional[CouplingPlan] = None) -> Tuple[H2Shape, H2Data]:
     """Package bases/couplings/dense into (H2Shape, H2Data)."""
     depth = tree.depth
     sr = [jnp.asarray(bs.s_rows[l], jnp.int32) for l in range(depth + 1)]
     sc = [jnp.asarray(bs.s_cols[l], jnp.int32) for l in range(depth + 1)]
-    data = H2Data(
+    if plan is None:
+        plan = build_coupling_plan(depth, bs.s_rows, bs.s_cols,
+                                   bs.d_rows, bs.d_cols)
+    data = remarshal(H2Data(
         u_leaf=u_leaf, v_leaf=u_leaf,
         e=list(e), f=[x for x in e],
         s=list(s_list), s_rows=sr, s_cols=sc,
         dense=dense,
         d_rows=jnp.asarray(bs.d_rows, jnp.int32),
-        d_cols=jnp.asarray(bs.d_cols, jnp.int32))
+        d_cols=jnp.asarray(bs.d_cols, jnp.int32),
+        plan=plan))
     shape = H2Shape(
         n=tree.n, leaf_size=tree.leaf_size, depth=depth, ranks=tuple(ranks),
         coupling_counts=bs.coupling_counts(),
         dense_count=int(bs.d_rows.shape[0]), symmetric=True,
-        row_maxb=bs.row_maxb(), col_maxb=bs.col_maxb())
+        row_maxb=bs.row_maxb(), col_maxb=bs.col_maxb(),
+        dense_maxb=int(plan.dblk.shape[0]) >> depth)
     return shape, data
 
 
@@ -121,6 +128,10 @@ def sketch_construct(points: np.ndarray, kernel: Callable, leaf_size: int,
     n = tree.n
     pts = jnp.asarray(tree.points, dtype)
     counts = bs.coupling_counts()
+    # one marshaling plan drives the sampler's block-row reductions here
+    # and the matvec/compression dispatch of the assembled operator
+    plan = build_coupling_plan(depth, bs.s_rows, bs.s_cols,
+                               bs.d_rows, bs.d_cols)
 
     try:                       # fail early with a pointer, not a tracer error
         import jax
@@ -146,6 +157,7 @@ def sketch_construct(points: np.ndarray, kernel: Callable, leaf_size: int,
             out.append(sample_block_rows(
                 pts_lvl, jnp.asarray(bs.s_rows[l], jnp.int32),
                 jnp.asarray(bs.s_cols[l], jnp.int32), omega,
+                plan.sblk[l],
                 kernel=kernel, chunk=chunk))
         return out
 
@@ -178,5 +190,6 @@ def sketch_construct(points: np.ndarray, kernel: Callable, leaf_size: int,
                               jnp.asarray(bs.d_cols, jnp.int32),
                               kernel=kernel).astype(dtype)
 
-    shape, data = _assemble(tree, bs, u_leaf, e, ranks, s_list, dense, dtype)
+    shape, data = _assemble(tree, bs, u_leaf, e, ranks, s_list, dense, dtype,
+                            plan=plan)
     return shape, data, tree, bs

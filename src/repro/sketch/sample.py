@@ -67,7 +67,8 @@ def apply_kernel_blocks(xt: jax.Array, xs: jax.Array, b: jax.Array,
 
 @functools.partial(jax.jit, static_argnames=("kernel", "chunk"))
 def sample_block_rows(pts_lvl: jax.Array, s_rows: jax.Array,
-                      s_cols: jax.Array, omega: jax.Array, *,
+                      s_cols: jax.Array, omega: jax.Array,
+                      plan_blk: jax.Array = None, *,
                       kernel: Callable, chunk: int = 256) -> jax.Array:
     """Block-row sketches of one level's admissible far field.
 
@@ -75,14 +76,24 @@ def sample_block_rows(pts_lvl: jax.Array, s_rows: jax.Array,
     s_rows/s_cols: [nb] block lists (sorted by row), omega: [nn, w, r]
     per-node Gaussian test matrices -> Y: [nn, w, r] with
     ``Y[t] = sum_{b: row(b)=t} kernel(x_t, x_{s_b}) @ omega[s_b]``.
+
+    When the construction's marshaling plan is passed (``plan_blk``: slot ->
+    block with the padding sentinel nb, zeroed by the fill-mode gather) the
+    block-row reduction is a gather into the conflict-free slot layout plus
+    a dense reshape-sum — the same single-dispatch schedule as the matvec,
+    no scatter.  Without a plan it falls back to ``segment_sum``.
     """
     nn = pts_lvl.shape[0]
     xt = jnp.take(pts_lvl, s_rows, axis=0)
     xs = jnp.take(pts_lvl, s_cols, axis=0)
     om = jnp.take(omega, s_cols, axis=0)
     y_b = apply_kernel_blocks(xt, xs, om, kernel=kernel, chunk=chunk)
-    return jax.ops.segment_sum(y_b, s_rows, num_segments=nn,
-                               indices_are_sorted=True)
+    if plan_blk is None:
+        return jax.ops.segment_sum(y_b, s_rows, num_segments=nn,
+                                   indices_are_sorted=True)
+    maxb = plan_blk.shape[0] // nn
+    yg = jnp.take(y_b, plan_blk, axis=0, mode="fill", fill_value=0)
+    return yg.reshape(nn, maxb, *y_b.shape[1:]).sum(axis=1)
 
 
 @functools.partial(jax.jit, static_argnames=("kernel",))

@@ -106,14 +106,62 @@ class TestBatchedSVD:
         assert s[0, 2:].max() < 1e-3 * s[0, 0]
 
 
+def _random_plan(rows, maxb, rng):
+    """Random per-row slot layout: (blk, col, cnt, nb)."""
+    cnt = rng.integers(0, maxb + 1, rows).astype(np.int32)
+    if cnt.max() < maxb:                       # ensure maxb is tight
+        cnt[rng.integers(0, rows)] = maxb
+    nb = int(cnt.sum())
+    blk = np.full(rows * maxb, nb, np.int32)
+    col = np.zeros(rows * maxb, np.int32)
+    b = 0
+    for r in range(rows):
+        for j in range(int(cnt[r])):
+            blk[r * maxb + j] = b
+            col[r * maxb + j] = rng.integers(0, rows)
+            b += 1
+    return jnp.asarray(blk), jnp.asarray(col), jnp.asarray(cnt), nb
+
+
 class TestCouplingMV:
     @pytest.mark.parametrize("rows,maxb,k,nv", [(4, 3, 8, 1), (8, 5, 16, 4),
                                                 (2, 1, 4, 2)])
     def test_matches_ref(self, rows, maxb, k, nv):
-        s = _rand((rows * maxb, k, k), jnp.float32)
-        x = _rand((rows * maxb, k, nv), jnp.float32)
-        out = ops.coupling_mv(s, x, maxb=maxb)
-        want = ref.coupling_mv(s, x, maxb=maxb)
+        rng = np.random.default_rng(rows * 100 + maxb)
+        blk, col, cnt, nb = _random_plan(rows, maxb, rng)
+        s = _rand((nb, k, k), jnp.float32)
+        x = _rand((rows, k, nv), jnp.float32)
+        out = ops.coupling_mv(s, x, blk, col, cnt, maxb=maxb)
+        want = ref.coupling_mv(s, x, blk, col, cnt, maxb=maxb)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_ref_matches_segment_sum(self):
+        """The plan oracle equals the textbook scatter formulation."""
+        rng = np.random.default_rng(7)
+        rows, maxb, k, nv = 6, 4, 8, 3
+        blk, col, cnt, nb = _random_plan(rows, maxb, rng)
+        s = _rand((nb, k, k), jnp.float32)
+        x = _rand((rows, k, nv), jnp.float32)
+        want = np.zeros((rows, k, nv), np.float32)
+        for r in range(rows):
+            for j in range(int(cnt[r])):
+                sl = r * maxb + j
+                want[r] += np.asarray(s)[int(blk[sl])] @ \
+                    np.asarray(x)[int(col[sl])]
+        got = ref.coupling_mv(s, x, blk, col, cnt, maxb=maxb)
+        np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4,
+                                   atol=1e-4)
+
+    def test_nv_tiling(self):
+        """nv > bnv exercises the nv-tile grid axis (and ragged padding)."""
+        rng = np.random.default_rng(11)
+        rows, maxb, k, nv = 4, 3, 8, 10
+        blk, col, cnt, nb = _random_plan(rows, maxb, rng)
+        s = _rand((nb, k, k), jnp.float32)
+        x = _rand((rows, k, nv), jnp.float32)
+        out = ops.coupling_mv(s, x, blk, col, cnt, maxb=maxb, bnv=4)
+        want = ref.coupling_mv(s, x, blk, col, cnt, maxb=maxb)
         np.testing.assert_allclose(np.asarray(out), np.asarray(want),
                                    rtol=1e-4, atol=1e-4)
 

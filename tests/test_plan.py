@@ -1,0 +1,191 @@
+"""Marshaling-plan correctness (DESIGN.md §3.5).
+
+The plan-dispatched coupling / dense phases (both the jnp stacked-K path
+and the interpret-mode Pallas gather-fused kernel) must match the seed
+gather/segment-sum reference bit-for-bit-close on arbitrary structures —
+including rank-0 levels, ``dense_count == 0``, and multi-vector widths —
+and the resulting jaxpr must contain zero scatter ops.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core.clustering import regular_grid_points
+from repro.core.construction import construct_h2
+from repro.core.kernels_fn import exponential_kernel
+from repro.core.matvec import h2_matvec
+from repro.core.structure import (H2Data, H2Shape, build_coupling_plan,
+                                  remarshal, shape_of)
+
+
+def _random_structure(rng, depth, leaf, rank0_level, with_dense):
+    """Arbitrary synthetic H^2 data: random block lists + values."""
+    ranks = [int(rng.integers(1, 5)) for _ in range(depth + 1)]
+    if rank0_level is not None:
+        ranks[rank0_level] = 0
+    nl = 1 << depth
+    s_rows, s_cols, s = [], [], []
+    for l in range(depth + 1):
+        nn = 1 << l
+        nb = int(rng.integers(0, 2 * nn + 1)) if l >= 1 else 0
+        pairs = sorted({(int(rng.integers(0, nn)), int(rng.integers(0, nn)))
+                        for _ in range(nb)})
+        r = np.array([p[0] for p in pairs], np.int64)
+        c = np.array([p[1] for p in pairs], np.int64)
+        s_rows.append(r)
+        s_cols.append(c)
+        s.append(rng.standard_normal((len(pairs), ranks[l], ranks[l])
+                                     ).astype(np.float32))
+    if with_dense:
+        nbd = int(rng.integers(1, 3 * nl))
+        pairs = sorted({(int(rng.integers(0, nl)), int(rng.integers(0, nl)))
+                        for _ in range(nbd)})
+    else:
+        pairs = []
+    d_rows = np.array([p[0] for p in pairs], np.int64)
+    d_cols = np.array([p[1] for p in pairs], np.int64)
+    dense = rng.standard_normal((len(pairs), leaf, leaf)).astype(np.float32)
+
+    u_leaf = rng.standard_normal((nl, leaf, ranks[depth])).astype(np.float32)
+    e = [jnp.zeros((0, 0, 0), jnp.float32)]
+    for l in range(1, depth + 1):
+        e.append(jnp.asarray(
+            rng.standard_normal((1 << l, ranks[l], ranks[l - 1])), jnp.float32))
+
+    data = H2Data(
+        u_leaf=jnp.asarray(u_leaf), v_leaf=jnp.asarray(u_leaf),
+        e=e, f=list(e),
+        s=[jnp.asarray(x) for x in s],
+        s_rows=[jnp.asarray(r, jnp.int32) for r in s_rows],
+        s_cols=[jnp.asarray(c, jnp.int32) for c in s_cols],
+        dense=jnp.asarray(dense),
+        d_rows=jnp.asarray(d_rows, jnp.int32),
+        d_cols=jnp.asarray(d_cols, jnp.int32))
+    plan = build_coupling_plan(depth, s_rows, s_cols, d_rows, d_cols)
+    shape = H2Shape(
+        n=nl * leaf, leaf_size=leaf, depth=depth, ranks=tuple(ranks),
+        coupling_counts=tuple(len(r) for r in s_rows),
+        dense_count=len(pairs), symmetric=True)
+    planned = remarshal(dataclasses.replace(data, plan=plan))
+    return shape, data, planned
+
+
+class TestPlanMatchesReference:
+    @pytest.mark.parametrize("nv", [1, 16])
+    @pytest.mark.parametrize("case", range(8))
+    def test_jnp_plan_path(self, nv, case):
+        """Random structures (varying depth/leaf, rank-0 levels, empty
+        dense lists) — plan path vs seed reference, bit-for-bit-close."""
+        rng = np.random.default_rng(1000 * case + nv)
+        depth = int(rng.integers(2, 5))
+        leaf = int(rng.choice([4, 8]))
+        r0 = int(rng.integers(1, depth + 1)) if case % 2 else None
+        with_dense = case % 3 != 0          # case 0, 3, 6: dense_count == 0
+        shape, legacy, planned = _random_structure(rng, depth, leaf, r0,
+                                                   with_dense)
+        x = jnp.asarray(rng.standard_normal((shape.n, nv)), jnp.float32)
+        y_ref = np.asarray(h2_matvec(shape, legacy, x))
+        y_plan = np.asarray(h2_matvec(shape, planned, x))
+        np.testing.assert_allclose(y_plan, y_ref, rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("nv,with_dense,seed", [
+        (1, True, 0), (16, True, 1), (1, False, 2), (16, False, 3)])
+    def test_pallas_plan_path(self, nv, with_dense, seed):
+        """Interpret-mode gather-fused kernel vs the seed reference."""
+        rng = np.random.default_rng(seed)
+        shape, legacy, planned = _random_structure(rng, 3, 4, None,
+                                                   with_dense)
+        x = jnp.asarray(rng.standard_normal((shape.n, nv)), jnp.float32)
+        y_ref = np.asarray(h2_matvec(shape, legacy, x))
+        y_pl = np.asarray(h2_matvec(shape, planned, x, backend="pallas"))
+        np.testing.assert_allclose(y_pl, y_ref, rtol=1e-4, atol=1e-4)
+
+    def test_rank0_level_pallas(self):
+        """A rank-0 level short-circuits cleanly on both backends."""
+        rng = np.random.default_rng(3)
+        shape, legacy, planned = _random_structure(rng, 3, 4, 2, True)
+        x = jnp.asarray(rng.standard_normal((shape.n, 2)), jnp.float32)
+        y_ref = np.asarray(h2_matvec(shape, legacy, x))
+        y_pl = np.asarray(h2_matvec(shape, planned, x, backend="pallas"))
+        np.testing.assert_allclose(y_pl, y_ref, rtol=1e-4, atol=1e-4)
+
+
+class TestSingleDispatch:
+    def _built(self):
+        pts = regular_grid_points(16, 2)
+        return construct_h2(pts, exponential_kernel(0.1), 8, 3, 0.9)
+
+    def test_no_scatter_in_matvec_jaxpr(self):
+        """Acceptance: the plan-dispatched HGEMV lowers to zero scatter(-add)
+        ops; the plan-less reference still scatters (guards sensitivity)."""
+        shape, data, tree, _ = self._built()
+        x = jnp.ones((shape.n, 4), jnp.float32)
+        jaxpr = str(jax.make_jaxpr(
+            lambda d, xx: h2_matvec(shape, d, xx))(data, x))
+        assert "scatter" not in jaxpr
+        legacy = dataclasses.replace(data, plan=None, s_mar=None,
+                                     dense_mar=None)
+        jaxpr_ref = str(jax.make_jaxpr(
+            lambda d, xx: h2_matvec(shape, d, xx))(legacy, x))
+        assert "scatter-add" in jaxpr_ref
+
+    def test_shape_of_recovers_maxb(self):
+        """Satellite: shape_of round-trips row/col/dense maxb from the plan
+        array shapes (it used to drop them)."""
+        shape, data, tree, bs = self._built()
+        s2 = shape_of(data, shape.leaf_size)
+        assert s2.row_maxb == bs.row_maxb()
+        assert s2.col_maxb == bs.col_maxb()
+        assert s2.dense_maxb == shape.dense_maxb
+        assert s2.dense_maxb >= 1
+
+    def test_marshaled_buffers_match_blocks(self):
+        """s_mar rows reassemble exactly the S blocks of that block row."""
+        shape, data, tree, _ = self._built()
+        for l in range(shape.depth + 1):
+            if shape.coupling_counts[l] == 0:
+                continue
+            nn = shape.nodes(l)
+            k = shape.ranks[l]
+            maxb = data.plan.sblk[l].shape[0] // nn
+            mar = np.asarray(data.s_mar[l]).reshape(nn, k, maxb, k)
+            rows = np.asarray(data.s_rows[l])
+            cols = np.asarray(data.s_cols[l])
+            sv = np.asarray(data.s[l])
+            for t in range(nn):
+                mine = np.nonzero(rows == t)[0]
+                for j, b in enumerate(mine):
+                    np.testing.assert_array_equal(mar[t, :, j, :], sv[b])
+                for j in range(len(mine), maxb):
+                    assert (mar[t, :, j, :] == 0).all()
+
+    def test_sketch_sampler_plan_matches_segment_sum(self):
+        """sketch/sample.py reuses the plan: both reductions agree."""
+        from repro.sketch.sample import sample_block_rows
+        rng = np.random.default_rng(0)
+        pts = rng.uniform(0, 1, (128, 2))
+        kern = exponential_kernel(0.3, xp=jnp)
+        from repro.core.clustering import build_cluster_tree
+        from repro.core.admissibility import build_block_structure
+        tree = build_cluster_tree(pts, 8)
+        bs = build_block_structure(tree, 0.8)
+        plan = build_coupling_plan(tree.depth, bs.s_rows, bs.s_cols,
+                                   bs.d_rows, bs.d_cols)
+        pj = jnp.asarray(tree.points, jnp.float32)
+        for l in range(tree.depth + 1):
+            if bs.s_rows[l].size == 0:
+                continue
+            nn = 1 << l
+            w = tree.n >> l
+            pts_lvl = pj.reshape(nn, w, -1)
+            om = jnp.asarray(rng.standard_normal((nn, w, 5)), jnp.float32)
+            sr = jnp.asarray(bs.s_rows[l], jnp.int32)
+            sc = jnp.asarray(bs.s_cols[l], jnp.int32)
+            y_seg = sample_block_rows(pts_lvl, sr, sc, om, kernel=kern)
+            y_plan = sample_block_rows(pts_lvl, sr, sc, om,
+                                       plan.sblk[l], kernel=kern)
+            np.testing.assert_allclose(np.asarray(y_plan), np.asarray(y_seg),
+                                       rtol=1e-5, atol=1e-5)
