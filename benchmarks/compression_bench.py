@@ -1,58 +1,199 @@
-"""Compression benchmark (paper Fig. 11/12): orthogonalization + compression
-timing, memory-reduction factor, and O(N) memory growth.
+"""Compression benchmark (paper Fig. 11/12 + §5 recompression rates).
 
-Direct paper-claim validation: the 2D test set (m=64, eta=0.9, Chebyshev 6x6
--> rank 36) compressed to tau=1e-3 should reduce low-rank memory by ~6x
-(paper reports 6x at 67M unknowns; small-N values run a little higher).
+Two halves:
+
+1. Phase timings of the recompression pipeline — ``orthogonalize`` /
+   ``compression_weights`` / ``truncate`` — at N in {4096, 16384}, each as
+   wall time + model Gflop/s (the flop model counts the batched QR/SVD/GEMM
+   work the paper's Fig. 12 rates are quoted on), plus the end-to-end
+   ``compress(tol=1e-3)`` wall time for the fused single-sweep path vs the
+   retired two-sweep baseline *measured in the same run* — the
+   ``compress_tol_speedup_N*`` record is the PR acceptance number.
+2. Paper-claim validation: memory-reduction factors of the 2D/3D test sets
+   and the O(N) memory growth (Fig. 11).
+
+Machine-readable records (name, us, model Gflop/s, N, stage, backend) are
+appended to ``records`` for ``benchmarks/run.py`` to serialize as
+``BENCH_compression.json`` — same trajectory contract as
+``BENCH_hgemv.json``.  ``REPRO_BENCH_QUICK=1`` (CI smoke) runs only the
+N=4096 phase sweep + speedup.
 """
 from __future__ import annotations
 
-import time
-from typing import List
+import os
+from typing import Dict, List, Optional
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.core.clustering import regular_grid_points
 from repro.core.construction import construct_h2
 from repro.core.kernels_fn import exponential_kernel
-from repro.core.compression import compress
+from repro.core.compression import (compress, compression_weights, truncate)
 from repro.core.orthogonalize import orthogonalize
+from repro.core.structure import shape_of
+
+from benchmarks.hgemv import time_fn
 
 
-def run(out_rows: List[str]) -> None:
+def _qr_flops(b: int, n: int, k: int) -> int:
+    return 2 * b * n * k * k
+
+
+def _svd_flops(b: int, n: int, k: int) -> int:
+    return 12 * b * n * k * k          # one-sided Jacobi / LAPACK ballpark
+
+
+def _gemm_flops(b: int, m: int, n: int, k: int) -> int:
+    return 2 * b * m * n * k
+
+
+def _orth_flops(shape) -> int:
+    """Leaf QR + stacked transfer QRs + the two-sided S re-expression."""
+    fl = _qr_flops(shape.n_leaves, shape.leaf_size, shape.ranks[shape.depth])
+    for l in range(1, shape.depth + 1):
+        fl += _qr_flops(shape.nodes(l) // 2, 2 * shape.ranks[l],
+                        shape.ranks[l - 1])
+    for l in range(shape.depth + 1):
+        k = shape.ranks[l]
+        fl += 2 * _gemm_flops(shape.coupling_counts[l], k, k, k)
+    return fl * (1 if shape.symmetric else 2)
+
+
+def _weights_flops(shape) -> int:
+    """QR of the stacked [R_par E^T; S^T...] panels, both trees."""
+    fl = 0
+    for l in range(1, shape.depth + 1):
+        k = shape.ranks[l]
+        rows = (1 + (shape.row_maxb[l] or 0)) * k
+        fl += _gemm_flops(shape.nodes(l), shape.ranks[l - 1], k, k)
+        fl += _qr_flops(shape.nodes(l), rows, k)
+    return 2 * fl
+
+
+def _truncate_flops(shape) -> int:
+    """Upsweep SVDs + projections + the coupling projection GEMMs."""
+    kq = shape.ranks[shape.depth]
+    fl = _svd_flops(shape.n_leaves, kq, kq)
+    fl += _gemm_flops(shape.n_leaves, shape.leaf_size, kq, kq)
+    for l in range(shape.depth, 0, -1):
+        kl, kp = shape.ranks[l], shape.ranks[l - 1]
+        fl += _gemm_flops(shape.nodes(l), kl, kp, kl)          # P E
+        fl += _gemm_flops(shape.nodes(l) // 2, 2 * kl, kp, kp)  # stack R
+        fl += _svd_flops(shape.nodes(l) // 2, 2 * kl, kp)
+        fl += _gemm_flops(shape.nodes(l) // 2, kp, kp, 2 * kl)  # project
+    for l in range(shape.depth + 1):
+        k = shape.ranks[l]
+        fl += 2 * _gemm_flops(shape.coupling_counts[l], k, k, k)
+    return fl * (1 if shape.symmetric else 2)
+
+
+def _record(records: Optional[List[Dict]], name: str, sec: float, n: int,
+            stage: str, flops: Optional[int] = None,
+            backend: str = "jnp", **extra) -> None:
+    if records is not None:
+        rec = {"name": name, "us": round(sec * 1e6, 1) if sec else None,
+               "model_gflops": round(flops / sec / 1e9, 3)
+               if flops and sec else None,
+               "N": n, "stage": stage, "backend": backend}
+        rec.update(extra)
+        records.append(rec)
+
+
+def _phase_sweep(side: int, out_rows: List[str],
+                 records: Optional[List[Dict]]) -> None:
+    pts = regular_grid_points(side, 2)
+    shape, data, tree, bs = construct_h2(
+        pts, exponential_kernel(0.1), leaf_size=64, cheb_p=6, eta=0.9)
+    n = shape.n
+
+    sec = time_fn(orthogonalize, shape, data, reps=5)
+    fl = _orth_flops(shape)
+    out_rows.append(f"orthogonalize_N{n},{sec*1e6:.0f},"
+                    f"gflops={fl/sec/1e9:.2f}")
+    _record(records, f"orthogonalize_N{n}", sec, n, "orthogonalize", fl)
+
+    od = orthogonalize(shape, data)
+    oshape = shape_of(od, shape.leaf_size, shape.symmetric)
+
+    weights_fn = jax.jit(compression_weights,
+                         static_argnames=("shape", "backend"))
+    sec = time_fn(weights_fn, oshape, od, reps=5)
+    fl = _weights_flops(oshape)
+    out_rows.append(f"weights_N{n},{sec*1e6:.0f},gflops={fl/sec/1e9:.2f}")
+    _record(records, f"weights_N{n}", sec, n, "weights", fl)
+
+    ru, rv = weights_fn(oshape, od)
+    cs_tol, _ = compress(oshape, od, tol=1e-3, assume_orthogonal=True)
+    tgt = cs_tol.ranks
+
+    def trunc_fn(d, ru, rv):
+        return truncate(oshape, d, list(ru), list(rv), tgt)[1]
+
+    trunc_jit = jax.jit(trunc_fn)
+    sec = time_fn(trunc_jit, od, tuple(ru), tuple(rv), reps=5)
+    fl = _truncate_flops(oshape)
+    out_rows.append(f"truncate_N{n},{sec*1e6:.0f},gflops={fl/sec/1e9:.2f}")
+    _record(records, f"truncate_N{n}", sec, n, "truncate", fl)
+
+    # end-to-end tol path: fused single sweep vs two-sweep baseline,
+    # measured back-to-back in the same run (the acceptance ratio)
+    def fused():
+        return compress(shape, data, tol=1e-3)[1].u_leaf
+
+    def twosweep():
+        return compress(shape, data, tol=1e-3, legacy_two_sweep=True
+                        )[1].u_leaf
+
+    sec_f = time_fn(fused, reps=5)
+    sec_b = time_fn(twosweep, reps=5)
+    speedup = sec_b / sec_f
+    out_rows.append(f"compress_tol_fused_N{n},{sec_f*1e6:.0f},"
+                    f"baseline_us={sec_b*1e6:.0f};speedup={speedup:.2f}")
+    _record(records, f"compress_tol_fused_N{n}", sec_f, n, "compress_tol")
+    _record(records, f"compress_tol_twosweep_N{n}", sec_b, n,
+            "compress_tol_baseline")
+    _record(records, f"compress_tol_speedup_N{n}", sec_f, n, "speedup",
+            speedup=round(speedup, 3), baseline_us=round(sec_b * 1e6, 1))
+
+    # the single-dispatch fixed-rank program (what the dry-run lowers)
+    def fixed():
+        return compress(shape, data, target_ranks=tgt)[1].u_leaf
+
+    sec = time_fn(fixed, reps=5)
+    out_rows.append(f"compress_fixed_N{n},{sec*1e6:.0f},ranks={tgt}")
+    _record(records, f"compress_fixed_N{n}", sec, n, "compress_fixed")
+
+
+def run(out_rows: List[str], records: Optional[List[Dict]] = None) -> None:
+    quick = os.environ.get("REPRO_BENCH_QUICK", "0") == "1"
+
+    # --- phase timings + fused-vs-baseline speedup ---
+    _phase_sweep(64, out_rows, records)               # N = 4096
+    if quick:
+        return
+    _phase_sweep(128, out_rows, records)              # N = 16384
+
     # --- Fig 11: compression effectiveness, 2D paper setup ---
     for side, m in ((64, 64), (128, 64)):
         pts = regular_grid_points(side, 2)
         shape, data, tree, bs = construct_h2(
             pts, exponential_kernel(0.1), leaf_size=m, cheb_p=6, eta=0.9)
-        t0 = time.perf_counter()
-        od = orthogonalize(shape, data)
-        jax.block_until_ready(od.u_leaf)
-        t_orth = time.perf_counter() - t0
-        t0 = time.perf_counter()
         cs, cd = compress(shape, data, tol=1e-3)
-        jax.block_until_ready(cd.u_leaf)
-        t_comp = time.perf_counter() - t0
         ratio = shape.memory_lowrank() / cs.memory_lowrank()
         out_rows.append(
-            f"compress2d_N{shape.n},{t_comp*1e6:.0f},"
-            f"orth_us={t_orth*1e6:.0f};mem_ratio={ratio:.2f};"
+            f"compress2d_N{shape.n},0,mem_ratio={ratio:.2f};"
             f"ranks={cs.ranks}")
+        _record(records, f"compress2d_N{shape.n}", 0.0, shape.n,
+                "mem_ratio", mem_ratio=round(float(ratio), 2))
 
     # --- 3D test set (tri-cubic rank 64 -> tau=1e-3, paper: ~3x) ---
-    n3 = 4096
     side3 = 16
     pts = regular_grid_points(side3, 3)
     shape, data, tree, bs = construct_h2(
         pts, exponential_kernel(0.2), leaf_size=64, cheb_p=4, eta=0.95)
-    t0 = time.perf_counter()
     cs, cd = compress(shape, data, tol=1e-3)
-    jax.block_until_ready(cd.u_leaf)
-    t_comp = time.perf_counter() - t0
     ratio = shape.memory_lowrank() / cs.memory_lowrank()
-    out_rows.append(f"compress3d_N{shape.n},{t_comp*1e6:.0f},"
+    out_rows.append(f"compress3d_N{shape.n},0,"
                     f"mem_ratio={ratio:.2f};Csp={bs.sparsity_constant()}")
 
     # --- O(N) memory growth (Fig 11 right) ---

@@ -52,7 +52,10 @@ def main() -> None:
             for r in rows[before:]:
                 print(r, flush=True)
             if records:
-                path = os.path.join(args.json_dir, f"BENCH_{name}.json")
+                stem = name[:-len("_bench")] if name.endswith("_bench") \
+                    else name
+                os.makedirs(args.json_dir, exist_ok=True)
+                path = os.path.join(args.json_dir, f"BENCH_{stem}.json")
                 with open(path, "w") as f:
                     json.dump(records, f, indent=1)
                 print(f"# wrote {path}", flush=True)

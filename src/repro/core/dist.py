@@ -680,38 +680,36 @@ def dist_compress_local(dshape: DistH2Shape, d: DistH2Data,
         w[l] = jnp.linalg.qr(stack, mode="r")[..., :kl, :]
 
     # ---- truncation upsweep: branch local -> gather at C-level -> top ----
-    svd = jnp.linalg.svd
-    wq, _, _ = svd(jnp.swapaxes(w[depth], -1, -2), full_matrices=False)
+    # the per-branch schedule is the single-device fused upsweep
+    # (compression.truncation_* steps) run inside shard_map
+    from .compression import truncation_inner_factors, \
+        truncation_leaf_factors, truncation_project
+    wq, _ = truncation_leaf_factors(w[depth])
     rq = min(tr[depth], wq.shape[-1])
     wk = wq[..., :rq]
     new_leaf = jnp.einsum("nmk,nkr->nmr", d.u_leaf, wk)
     pmap_: Dict[int, jax.Array] = {depth: jnp.swapaxes(wk, -1, -2)}
     new_e_br = [d.e_br[0]] + [None] * (depth - lc)
     for l in range(depth, lc, -1):
-        nn = dshape.nodes_local(l - 1) * 2 if l - 1 >= lc else 1
-        pe = jnp.einsum("crk,ckp->crp", pmap_[l], d.e_br[l - lc])
-        rl = pe.shape[1]
-        stack = pe.reshape(pe.shape[0] // 2, 2 * rl, -1)
-        mmat = jnp.einsum("nik,njk->nij", stack, w[l - 1])
-        g, _, _ = svd(mmat, full_matrices=False)
+        stack, g, _ = truncation_inner_factors(pmap_[l], d.e_br[l - lc],
+                                               w[l - 1])
+        rl = stack.shape[1] // 2
         rp = min(tr[l - 1], g.shape[-1], 2 * rl)
         gk = g[..., :rp]
-        new_e_br[l - lc] = gk.reshape(pe.shape[0], rl, rp)
-        pmap_[l - 1] = jnp.einsum("nir,nik->nrk", gk, stack)
+        new_e_br[l - lc] = gk.reshape(2 * stack.shape[0], rl, rp)
+        pmap_[l - 1] = truncation_project(gk, stack)
     # gather branch-root projections, continue on top
     p_top: Dict[int, jax.Array] = {
         lc: jax.lax.all_gather(pmap_[lc], axis, tiled=True)}
     new_e_top = [d.e_top[0]] + [None] * lc
     for l in range(lc, 0, -1):
-        pe = jnp.einsum("crk,ckp->crp", p_top[l], d.e_top[l])
-        rl = pe.shape[1]
-        stack = pe.reshape(pe.shape[0] // 2, 2 * rl, -1)
-        mmat = jnp.einsum("nik,njk->nij", stack, w_top[l - 1])
-        g, _, _ = svd(mmat, full_matrices=False)
+        stack, g, _ = truncation_inner_factors(p_top[l], d.e_top[l],
+                                               w_top[l - 1])
+        rl = stack.shape[1] // 2
         rp = min(tr[l - 1], g.shape[-1], 2 * rl)
         gk = g[..., :rp]
-        new_e_top[l] = gk.reshape(pe.shape[0], rl, rp)
-        p_top[l - 1] = jnp.einsum("nir,nik->nrk", gk, stack)
+        new_e_top[l] = gk.reshape(2 * stack.shape[0], rl, rp)
+        p_top[l - 1] = truncation_project(gk, stack)
 
     # ---- coupling projection (halo exchange for remote column maps) ----
     s_br_new, s_top_new = [], []

@@ -10,20 +10,19 @@ the compression downsweep (paper Eq. 4).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import List, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from .structure import H2Data, H2Shape, remarshal, shape_of
+from .structure import H2Data, H2Shape, remarshal
 
 
 def _batched_qr(a: jax.Array, backend: str) -> Tuple[jax.Array, jax.Array]:
-    if backend == "pallas":
-        from repro.kernels import ops as kops
-        return kops.batched_qr(a)
-    return jnp.linalg.qr(a, mode="reduced")
+    from repro.kernels.ops import backend_qr
+    return backend_qr(a, backend)
 
 
 def orthogonalize_tree(leaf: jax.Array, transfers: List[jax.Array],
@@ -52,12 +51,17 @@ def orthogonalize_tree(leaf: jax.Array, transfers: List[jax.Array],
     return q_leaf, new_tr, r
 
 
-@functools.partial(jax.jit, static_argnames=("shape", "backend"))
-def orthogonalize(shape: H2Shape, data: H2Data, backend: str = "jnp"
-                  ) -> H2Data:
-    """Orthogonalize both basis trees and update the coupling blocks."""
+def _orthogonalize_impl(shape: H2Shape, data: H2Data, backend: str,
+                        aliased: bool) -> H2Data:
+    """Trace-level body shared by the public wrapper and the fused
+    compression pipeline (``compression._orthogonalize_weights``).
+
+    ``aliased`` must be decided on *concrete* data before tracing: inside a
+    jit the two trees flatten to distinct tracers, so an ``is`` check here
+    would silently factor the symmetric tree twice.
+    """
     u_leaf, e_new, ru = orthogonalize_tree(data.u_leaf, data.e, backend)
-    if data.v_leaf is data.u_leaf and shape.symmetric:
+    if aliased and shape.symmetric:
         v_leaf, f_new, rv = u_leaf, e_new, ru
     else:
         v_leaf, f_new, rv = orthogonalize_tree(data.v_leaf, data.f, backend)
@@ -65,9 +69,6 @@ def orthogonalize(shape: H2Shape, data: H2Data, backend: str = "jnp"
     s_new = []
     for l in range(shape.depth + 1):
         if shape.coupling_counts[l] == 0:
-            # rank at this level may have changed
-            kl = e_new[l].shape[1] if l > 0 else (
-                e_new[1].shape[2] if shape.depth >= 1 else data.s[l].shape[1])
             s_new.append(jnp.zeros((0, ru[l].shape[-2], rv[l].shape[-2]),
                                    data.u_leaf.dtype))
             continue
@@ -81,3 +82,22 @@ def orthogonalize(shape: H2Shape, data: H2Data, backend: str = "jnp"
         s_rows=list(data.s_rows), s_cols=list(data.s_cols),
         dense=data.dense, d_rows=data.d_rows, d_cols=data.d_cols,
         plan=data.plan, dense_mar=data.dense_mar), dense=False)
+
+
+@functools.partial(jax.jit, static_argnames=("shape", "backend", "aliased"))
+def _orthogonalize_jit(shape: H2Shape, data: H2Data, backend: str,
+                       aliased: bool) -> H2Data:
+    return _orthogonalize_impl(shape, data, backend, aliased)
+
+
+def orthogonalize(shape: H2Shape, data: H2Data, backend: str = "jnp"
+                  ) -> H2Data:
+    """Orthogonalize both basis trees and update the coupling blocks."""
+    aliased = bool(shape.symmetric and data.v_leaf is data.u_leaf)
+    out = _orthogonalize_jit(shape, data, backend, aliased)
+    if aliased:
+        # the jit boundary returns distinct (equal-valued) buffers for the
+        # two trees; restore the alias so downstream `is`-based symmetric
+        # fast paths (compression sweeps) keep factoring one tree
+        out = dataclasses.replace(out, v_leaf=out.u_leaf, f=out.e)
+    return out

@@ -1,13 +1,30 @@
-"""Pallas TPU kernel: batched Householder QR of tall-skinny panels.
+"""Pallas TPU kernel: batched blocked (compact-WY) Householder QR.
 
 The paper's compression leans on KBLAS batched QR of stacked
-``(C_sp+1)k x k`` panels (Eq. 4).  TPU adaptation: one panel per grid step,
-held entirely in VMEM (panels are at most a few thousand rows of <=128
-columns), Householder reflections vectorized over rows with iota masks —
-the column loop is a ``fori_loop`` so the kernel lowers to a compact scan
-rather than k unrolled steps.
+``(C_sp+1)k x k`` panels (Eq. 4).  TPU adaptation: blocked Householder QR
+in compact-WY form so the MXU does the O(nk^2) work:
 
-Returns (Q, R) with Q: [B, n, k] (reduced), R: [B, k, k] upper-triangular.
+- the k columns are factored in *column panels* of width ``panel``; within
+  a panel the reflectors are classical Householder steps (VPU rank-1
+  updates on the [n, panel] slice only),
+- each finished panel is aggregated as ``H_0 ... H_{p-1} = I - V T V^T``
+  (compact WY, T upper triangular) and applied to the trailing columns as
+  two batched GEMMs — the dominant cost rides the MXU instead of k
+  scalar-at-a-time column sweeps,
+- Q is accumulated panel-by-panel in reverse with the same WY GEMMs.
+
+Small panels are batched: one grid step factors ``bb`` independent panels
+(the ``[bb, n, k]`` block), so the contractions see an effective batch and
+the grid does not degenerate to per-matrix steps when k is small.
+
+The reflector buffer of the previous implementation (``vs_ref``, a
+``[B, k, n]`` f32 pallas output) is gone: no caller consumed it, and it
+cost an extra O(Bnk) HBM write per QR.  V/T live only in registers/VMEM
+for the lifetime of a grid step.
+
+Returns (Q, R) with Q: [B, n, k] (reduced), R: [B, k, k] upper-triangular
+with non-negative diagonal (sign-fixed, so the factorization is unique for
+full-rank panels).
 """
 from __future__ import annotations
 
@@ -18,73 +35,120 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _house_apply(a, v, j):
-    """Apply H = I - 2 v v^T to a ([n, k]); v is [n, 1] (already masked)."""
-    w = 2.0 * (v.T @ a)            # [1, k]
-    return a - v @ w
+def _wy_apply(v: jax.Array, t: jax.Array, x: jax.Array,
+              transpose_t: bool) -> jax.Array:
+    """x <- (I - V T V^T) x (or T^T), batched over the leading axis."""
+    w = jnp.einsum("bnp,bnc->bpc", v, x)
+    w = jnp.einsum("bqp,bqc->bpc" if transpose_t else "bpq,bqc->bpc", t, w)
+    return x - jnp.einsum("bnp,bpc->bnc", v, w)
 
 
-def _qr_kernel(a_ref, q_ref, r_ref, vs_ref):
-    n, k = a_ref.shape[1], a_ref.shape[2]
-    a0 = a_ref[0].astype(jnp.float32)
+def _qr_body(a: jax.Array, panel: int):
+    """Blocked reduced QR of [bb, n, k] (f32), sign-fixed diagonal.
+
+    Returns (Q [bb, n, kn], R [bb, kn, k]) with kn = min(n, k) — the
+    reduced-QR shapes, so wide panels (n < k, e.g. high-order Chebyshev
+    leaf bases) get the upper-trapezoidal R jnp.linalg.qr would produce.
+    """
+    bb, n, k = a.shape
+    kn = min(n, k)
     rows = jax.lax.broadcasted_iota(jnp.int32, (n, 1), 0)
 
-    def col_step(j, carry):
-        a, vs = carry
-        col = jax.lax.dynamic_slice(a, (0, j), (n, 1))        # [n,1]
-        mask = rows >= j
-        x = jnp.where(mask, col, 0.0)
-        sigma = jnp.sqrt(jnp.sum(x * x))
-        xj = jax.lax.dynamic_slice(x, (j, 0), (1, 1))[0, 0]
-        sign = jnp.where(xj >= 0.0, 1.0, -1.0)
-        alpha = -sign * sigma
-        v = x - alpha * jnp.where(rows == j, 1.0, 0.0)
-        vnorm = jnp.sqrt(jnp.sum(v * v))
-        safe = vnorm > 1e-30
-        v = jnp.where(safe, v / jnp.maximum(vnorm, 1e-30), 0.0)
-        a = _house_apply(a, v, j)
-        vs = jax.lax.dynamic_update_slice(vs, v.T, (j, 0))
-        return a, vs
+    factors = []                              # per panel: (V, T)
+    for s in range(0, kn, panel):
+        pw = min(panel, kn - s)
+        p = a[:, :, s:s + pw]                 # [bb, n, pw]
+        v_pan = jnp.zeros((bb, n, pw), jnp.float32)
+        t_pan = jnp.zeros((bb, pw, pw), jnp.float32)
+        for j in range(pw):
+            jj = s + j
+            col = p[:, :, j]                  # [bb, n]
+            mask = (rows >= jj)[:, 0]         # [n]
+            x = jnp.where(mask[None, :], col, 0.0)
+            sigma = jnp.sqrt(jnp.sum(x * x, axis=1))          # [bb]
+            xj = x[:, jj]
+            sign = jnp.where(xj >= 0.0, 1.0, -1.0)
+            alpha = -sign * sigma
+            v = x - alpha[:, None] * (rows[:, 0] == jj)[None, :]
+            vnorm = jnp.sqrt(jnp.sum(v * v, axis=1))
+            safe = vnorm > 1e-30
+            v = jnp.where(safe[:, None],
+                          v / jnp.maximum(vnorm, 1e-30)[:, None], 0.0)
+            # apply H = I - 2 v v^T to the remaining panel columns (VPU)
+            w = 2.0 * jnp.einsum("bn,bnp->bp", v, p)
+            p = p - jnp.einsum("bn,bp->bnp", v, w)
+            # grow T: T[:j, j] = -2 T[:j,:j] (V[:,:j]^T v); T[j, j] = 2
+            if j > 0:
+                vtv = jnp.einsum("bnq,bn->bq", v_pan[:, :, :j], v)
+                tcol = -2.0 * jnp.einsum("bpq,bq->bp", t_pan[:, :j, :j], vtv)
+                t_pan = t_pan.at[:, :j, j].set(tcol)
+            t_pan = t_pan.at[:, j, j].set(2.0)
+            v_pan = v_pan.at[:, :, j].set(v)
+        a = jax.lax.dynamic_update_slice(a, p, (0, 0, s))
+        # trailing update with the aggregated panel (two GEMMs -> MXU):
+        # A_tr <- (H_{pw-1}..H_0) A_tr = (I - V T^T V^T) A_tr
+        if s + pw < k:
+            trail = _wy_apply(v_pan, t_pan, a[:, :, s + pw:],
+                              transpose_t=True)
+            a = jax.lax.dynamic_update_slice(a, trail, (0, 0, s + pw))
+        factors.append((v_pan, t_pan))
 
-    vs0 = jnp.zeros((k, n), jnp.float32)
-    a_fin, vs = jax.lax.fori_loop(0, k, col_step, (a0, vs0))
-    # R = top k x k of the reduced panel
-    cols = jax.lax.broadcasted_iota(jnp.int32, (k, k), 1)
-    rws = jax.lax.broadcasted_iota(jnp.int32, (k, k), 0)
-    r_ref[0] = jnp.where(cols >= rws, a_fin[:k, :], 0.0).astype(r_ref.dtype)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (kn, k), 1)
+    rws = jax.lax.broadcasted_iota(jnp.int32, (kn, k), 0)
+    r = jnp.where(cols >= rws, a[:, :kn, :], 0.0)
 
-    # Q = H_0 ... H_{k-1} [I_k; 0]  (apply reflectors in reverse order)
-    qinit = jnp.where((rows == jax.lax.broadcasted_iota(jnp.int32, (n, k), 1)),
-                      1.0, 0.0)
+    # Q = (I - V_0 T_0 V_0^T) ... (I - V_L T_L V_L^T) [I_kn; 0]
+    q = jnp.broadcast_to(
+        jnp.eye(n, kn, dtype=jnp.float32)[None], (bb, n, kn))
+    for v_pan, t_pan in reversed(factors):
+        q = _wy_apply(v_pan, t_pan, q, transpose_t=False)
 
-    def q_step(i, q):
-        j = k - 1 - i
-        v = jax.lax.dynamic_slice(vs, (j, 0), (1, n)).T       # [n,1]
-        return _house_apply(q, v, j)
-
-    q = jax.lax.fori_loop(0, k, q_step, qinit)
-    q_ref[0] = q.astype(q_ref.dtype)
-    vs_ref[0] = vs.astype(vs_ref.dtype)
+    # sign-fix: non-negative R diagonal (unique factorization)
+    d = jnp.where(jnp.diagonal(r, axis1=1, axis2=2) < 0.0, -1.0, 1.0)
+    r = r * d[:, :, None]
+    q = q * d[:, None, :]
+    return q, r
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def batched_qr(a: jax.Array, *, interpret: bool = True):
-    """A: [B, n, k] (n >= k) -> (Q [B, n, k], R [B, k, k])."""
+def _qr_kernel(a_ref, q_ref, r_ref, *, panel: int):
+    q, r = _qr_body(a_ref[...].astype(jnp.float32), panel)
+    q_ref[...] = q.astype(q_ref.dtype)
+    r_ref[...] = r.astype(r_ref.dtype)
+
+
+def _default_bb(nb: int, n: int) -> int:
+    """Panels per grid step: batch small panels so contractions stay fat."""
+    return max(1, min(nb, 512 // max(n, 1), 16))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("panel", "bb", "interpret"))
+def batched_qr(a: jax.Array, *, panel: int = 8, bb: int | None = None,
+               interpret: bool = True):
+    """A: [B, n, k] -> reduced (Q [B, n, kn], R [B, kn, k]), kn=min(n,k)."""
     nb, n, k = a.shape
-    q, r, _ = pl.pallas_call(
-        _qr_kernel,
-        grid=(nb,),
-        in_specs=[pl.BlockSpec((1, n, k), lambda b: (b, 0, 0))],
+    kn = min(n, k)
+    if nb == 0 or k == 0 or n == 0:
+        return (jnp.zeros((nb, n, kn), a.dtype),
+                jnp.zeros((nb, kn, k), a.dtype))
+    bb = bb or _default_bb(nb, n)
+    pad = (-nb) % bb
+    ap = jnp.concatenate(
+        [a, jnp.zeros((pad, n, k), a.dtype)], axis=0) if pad else a
+    nbp = nb + pad
+    kern = functools.partial(_qr_kernel, panel=min(panel, kn))
+    q, r = pl.pallas_call(
+        kern,
+        grid=(nbp // bb,),
+        in_specs=[pl.BlockSpec((bb, n, k), lambda b: (b, 0, 0))],
         out_specs=[
-            pl.BlockSpec((1, n, k), lambda b: (b, 0, 0)),
-            pl.BlockSpec((1, k, k), lambda b: (b, 0, 0)),
-            pl.BlockSpec((1, k, n), lambda b: (b, 0, 0)),
+            pl.BlockSpec((bb, n, kn), lambda b: (b, 0, 0)),
+            pl.BlockSpec((bb, kn, k), lambda b: (b, 0, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((nb, n, k), a.dtype),
-            jax.ShapeDtypeStruct((nb, k, k), a.dtype),
-            jax.ShapeDtypeStruct((nb, k, n), jnp.float32),
+            jax.ShapeDtypeStruct((nbp, n, kn), a.dtype),
+            jax.ShapeDtypeStruct((nbp, kn, k), a.dtype),
         ],
         interpret=interpret,
-    )(a)
-    return q, r
+    )(ap)
+    return q[:nb], r[:nb]

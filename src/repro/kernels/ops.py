@@ -10,6 +10,7 @@ from __future__ import annotations
 import os
 
 import jax
+import jax.numpy as jnp
 
 from . import batched_gemm as _bg
 from . import batched_qr as _bq
@@ -19,15 +20,48 @@ from . import coupling_mv as _cm
 INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
 
 
+def backend_qr(a: jax.Array, backend: str = "jnp", **kw):
+    """Backend-dispatched reduced QR (the one helper every caller shares:
+    orthogonalize, compression weights, sketch rangefinder)."""
+    if backend == "pallas":
+        return batched_qr(a, **kw)
+    return jnp.linalg.qr(a, mode="reduced")
+
+
+def backend_qr_r(a: jax.Array, backend: str = "jnp", **kw) -> jax.Array:
+    """R factor only."""
+    if backend == "pallas":
+        return batched_qr(a, **kw)[1]
+    return jnp.linalg.qr(a, mode="r")
+
+
+def backend_svd(a: jax.Array, backend: str = "jnp", **kw):
+    if backend == "pallas":
+        return batched_svd(a, **kw)
+    return jnp.linalg.svd(a, full_matrices=False)
+
+
 def batched_gemm(a: jax.Array, b: jax.Array, **kw) -> jax.Array:
     return _bg.batched_gemm(a, b, interpret=INTERPRET, **kw)
 
 
 def batched_qr(a: jax.Array, **kw):
+    """Blocked compact-WY Householder QR.
+
+    kw: ``panel`` (column-panel width for the WY trailing updates) and
+    ``bb`` (matrices factored per grid step; defaults to a heuristic that
+    keeps the batch fat when k is small).
+    """
     return _bq.batched_qr(a, interpret=INTERPRET, **kw)
 
 
 def batched_svd(a: jax.Array, **kw):
+    """Brent-Luk parallel-order one-sided Jacobi SVD.
+
+    kw: ``max_sweeps`` / ``tol`` (off-diagonal-norm early exit: stop when
+    ``||offdiag(A^T A)||_F <= tol * ||A||_F^2``) and ``bb`` (matrices per
+    grid step).
+    """
     return _bs.batched_svd(a, interpret=INTERPRET, **kw)
 
 

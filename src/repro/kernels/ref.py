@@ -13,6 +13,17 @@ def batched_qr(a: jax.Array):
     return jnp.linalg.qr(a, mode="reduced")
 
 
+def batched_qr_signfixed(a: jax.Array):
+    """QR canonicalized to a non-negative R diagonal.
+
+    The Pallas kernel emits this unique form directly, so the parity tests
+    can compare Q columns and R rows elementwise instead of up-to-sign.
+    """
+    q, r = jnp.linalg.qr(a, mode="reduced")
+    d = jnp.where(jnp.diagonal(r, axis1=-2, axis2=-1) < 0.0, -1.0, 1.0)
+    return q * d[..., None, :], r * d[..., :, None]
+
+
 def batched_svd(a: jax.Array):
     u, s, vt = jnp.linalg.svd(a, full_matrices=False)
     return u, s, vt

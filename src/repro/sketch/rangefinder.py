@@ -35,10 +35,13 @@ import jax.numpy as jnp
 
 
 def _batched_qr(a: jax.Array, backend: str) -> Tuple[jax.Array, jax.Array]:
-    if backend == "pallas":
-        from repro.kernels import ops as kops
-        return kops.batched_qr(a)
-    return jnp.linalg.qr(a, mode="reduced")
+    from repro.kernels.ops import backend_qr
+    return backend_qr(a, backend)
+
+
+def _batched_svd(a: jax.Array, backend: str, **kw):
+    from repro.kernels.ops import backend_svd
+    return backend_svd(a, backend, **kw)
 
 
 @functools.partial(jax.jit, static_argnames=("backend",))
@@ -48,9 +51,12 @@ def orthonormal_basis(b: jax.Array, backend: str = "jnp"
 
     b: [nn, rows, R] -> (basis [nn, rows, p], svals [nn, p]) with
     p = min(rows, R); ``basis[..., :k]`` is the best rank-k sketch basis.
+    The QR/SVD hot loop rides the blocked-WY QR and parallel-Jacobi SVD
+    kernels when ``backend="pallas"`` — the same pair the recompression
+    upsweep dispatches.
     """
     q, r = _batched_qr(b, backend)
-    u, s, _ = jnp.linalg.svd(r, full_matrices=False)
+    u, s, _ = _batched_svd(r, backend)
     return jnp.einsum("nrp,npj->nrj", q, u), s
 
 
@@ -64,6 +70,9 @@ def sketch_spectrum(y: jax.Array, backend: str = "jnp") -> jax.Array:
     sketch is *saturated* and more samples are needed.
     """
     r = _batched_qr(y, backend)[1]
+    if backend == "pallas":
+        # spectrum only: skip the U-orthonormality polish QR entirely
+        return _batched_svd(r, backend, polish=False)[1]
     return jnp.linalg.svd(r, compute_uv=False)
 
 

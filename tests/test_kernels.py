@@ -106,6 +106,176 @@ class TestBatchedSVD:
         assert s[0, 2:].max() < 1e-3 * s[0, 0]
 
 
+def _conditioned(rng, b, n, k, log_cond):
+    """Batch of panels with prescribed condition number 10**log_cond."""
+    out = np.empty((b, n, k), np.float32)
+    for i in range(b):
+        u, _ = np.linalg.qr(rng.standard_normal((n, k)))
+        v, _ = np.linalg.qr(rng.standard_normal((k, k)))
+        out[i] = (u * np.logspace(0, -log_cond, k)) @ v.T
+    return jnp.asarray(out)
+
+
+class TestBatchedQRHard:
+    """Parity on ill-conditioned / rank-deficient panels (DESIGN.md §5.5)."""
+
+    def test_sign_fixed_matches_ref_elementwise(self):
+        """The kernel emits the unique non-negative-diagonal factorization,
+        so Q columns and R rows compare directly against the canonicalized
+        jnp oracle — no up-to-sign slack."""
+        a = _rand((3, 24, 8), jnp.float32)
+        q, r = ops.batched_qr(a)
+        q_ref, r_ref = ref.batched_qr_signfixed(a)
+        np.testing.assert_allclose(np.asarray(q), np.asarray(q_ref),
+                                   rtol=1e-3, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(r), np.asarray(r_ref),
+                                   rtol=1e-3, atol=1e-4)
+
+    @pytest.mark.parametrize("log_cond", [4, 6])
+    def test_ill_conditioned_residual_and_orthogonality(self, log_cond):
+        rng = np.random.default_rng(17 + log_cond)
+        a = _conditioned(rng, 2, 32, 8, log_cond)
+        q, r = ops.batched_qr(a)
+        res = np.einsum("bnk,bkj->bnj", np.asarray(q), np.asarray(r)) \
+            - np.asarray(a)
+        scale = np.abs(np.asarray(a)).max()
+        assert np.abs(res).max() < 1e-5 * scale
+        gram = np.einsum("bnk,bnj->bkj", np.asarray(q), np.asarray(q))
+        assert np.abs(gram - np.eye(8)).max() < 1e-4
+
+    def test_rank_deficient_panel(self):
+        rng = np.random.default_rng(5)
+        base = rng.standard_normal((2, 20, 3)).astype(np.float32)
+        a = jnp.asarray(base @ rng.standard_normal((2, 3, 9)
+                                                   ).astype(np.float32))
+        q, r = ops.batched_qr(a)
+        res = np.einsum("bnk,bkj->bnj", np.asarray(q), np.asarray(r)) \
+            - np.asarray(a)
+        assert np.abs(res).max() < 1e-4 * np.abs(np.asarray(a)).max()
+        # R collapses to (numerical) rank 3: rows 3.. are tiny
+        rr = np.abs(np.asarray(r))
+        assert rr[:, 3:, :].max() < 1e-3 * rr.max()
+
+    def test_wide_panel_reduced_shapes(self):
+        """n < k (high-order Chebyshev leaf bases): reduced-QR shapes
+        Q [n, kn], R [kn, k] with kn = min(n, k), like jnp.linalg.qr."""
+        a = _rand((3, 16, 36), jnp.float32)
+        q, r = ops.batched_qr(a)
+        assert q.shape == (3, 16, 16) and r.shape == (3, 16, 36)
+        rec = np.einsum("bnk,bkj->bnj", np.asarray(q), np.asarray(r))
+        np.testing.assert_allclose(rec, np.asarray(a), rtol=1e-3, atol=1e-4)
+        gram = np.einsum("bnk,bnj->bkj", np.asarray(q), np.asarray(q))
+        np.testing.assert_allclose(gram, np.broadcast_to(np.eye(16),
+                                                         gram.shape),
+                                   atol=1e-4)
+
+    def test_blocking_paths(self):
+        """Ragged batch blocks (nb % bb != 0) and ragged column panels
+        (k % panel != 0) agree with the unblocked kernel."""
+        a = _rand((7, 20, 10), jnp.float32)
+        q0, r0 = ops.batched_qr(a, bb=1, panel=10)
+        q1, r1 = ops.batched_qr(a, bb=3, panel=4)
+        np.testing.assert_allclose(np.asarray(q0), np.asarray(q1),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(r0), np.asarray(r1),
+                                   rtol=1e-4, atol=1e-4)
+
+
+class TestBatchedSVDHard:
+    """Parity on ill-conditioned / rank-deficient panels (DESIGN.md §5.5)."""
+
+    def test_sigma_descending_and_matches_ref(self):
+        a = _rand((3, 18, 7), jnp.float32)          # odd k: pad column path
+        _, s, _ = ops.batched_svd(a)
+        s = np.asarray(s)
+        assert (np.diff(s, axis=-1) <= 1e-5).all()
+        _, s_ref, _ = ref.batched_svd(a)
+        np.testing.assert_allclose(s, np.asarray(s_ref), rtol=1e-3,
+                                   atol=1e-3)
+
+    @pytest.mark.parametrize("log_cond", [3, 5])
+    def test_ill_conditioned_reconstruction(self, log_cond):
+        rng = np.random.default_rng(23 + log_cond)
+        a = _conditioned(rng, 2, 24, 8, log_cond)
+        u, s, vt = ops.batched_svd(a)
+        rec = np.einsum("bnk,bk,bkj->bnj", np.asarray(u), np.asarray(s),
+                        np.asarray(vt))
+        smax = float(np.asarray(s).max())
+        # the QR polish trades a few ulps of reconstruction for exact U
+        # orthonormality; both resolve to ~sqrt(eps)*smax in f32
+        assert np.abs(rec - np.asarray(a)).max() < 1e-3 * smax
+        _, s_ref, _ = ref.batched_svd(a)
+        assert np.abs(np.asarray(s) - np.asarray(s_ref)).max() < 1e-3 * smax
+
+    def test_rank_deficient_odd_k(self):
+        rng = np.random.default_rng(9)
+        base = rng.standard_normal((2, 16, 2)).astype(np.float32)
+        a = jnp.asarray(base @ rng.standard_normal((2, 2, 7)
+                                                   ).astype(np.float32))
+        u, s, vt = ops.batched_svd(a)
+        s = np.asarray(s)
+        assert s[:, 2:].max() < 1e-3 * s[:, 0].min()
+        rec = np.einsum("bnk,bk,bkj->bnj", np.asarray(u), s,
+                        np.asarray(vt))
+        assert np.abs(rec - np.asarray(a)).max() < 1e-4 * s.max()
+
+    def test_graded_spectrum_kept_columns_orthonormal(self):
+        """Recompression feeds graded spectra (sigma ratios 1e-7+); the
+        QR polish must keep ALL U columns orthonormal, not just the
+        well-separated ones (regression: unpolished Gram-Jacobi left
+        kept columns at O(1) non-orthogonality and broke the pallas
+        compress(tol) path end-to-end)."""
+        rng = np.random.default_rng(31)
+        a = _conditioned(rng, 2, 24, 12, 7)
+        u, s, vt = ops.batched_svd(a)
+        gram = np.einsum("bnk,bnj->bkj", np.asarray(u), np.asarray(u))
+        assert np.abs(gram - np.eye(12)).max() < 1e-4
+        rec = np.einsum("bnk,bk,bkj->bnj", np.asarray(u), np.asarray(s),
+                        np.asarray(vt))
+        smax = float(np.asarray(s).max())
+        assert np.abs(rec - np.asarray(a)).max() < 1e-3 * smax
+
+    def test_early_exit_converged(self):
+        """The off-diagonal-norm early exit stops at the same answer a
+        much longer fixed-sweep run reaches."""
+        a = _rand((2, 16, 8), jnp.float32)
+        _, s1, _ = ops.batched_svd(a, max_sweeps=15)
+        _, s2, _ = ops.batched_svd(a, max_sweeps=60)
+        np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_batch_blocking_paths(self):
+        a = _rand((5, 12, 6), jnp.float32)
+        _, s0, _ = ops.batched_svd(a, bb=1)
+        _, s1, _ = ops.batched_svd(a, bb=2)
+        np.testing.assert_allclose(np.asarray(s0), np.asarray(s1),
+                                   rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("scale", [1e10, 1e-18])
+    def test_extreme_norms(self, scale):
+        """Per-matrix Frobenius normalization keeps the convergence test
+        finite (regression: the Gram fourth powers overflowed f32 at
+        ~1e10 inputs, the off-norm went NaN and the while_loop exited
+        after ZERO sweeps with unrotated column norms as sigma)."""
+        a = _rand((2, 16, 8), jnp.float32) * scale
+        _, s, _ = ops.batched_svd(a)
+        _, s_ref, _ = ref.batched_svd(a)
+        smax = float(np.asarray(s_ref).max()) or 1.0
+        assert np.abs(np.asarray(s) - np.asarray(s_ref)).max() < 1e-3 * smax
+
+    def test_wide_input_reduced_shapes(self):
+        """n < k: (U, sigma, V^T) must carry the jnp.linalg.svd reduced
+        shapes — [n, kn], [kn], [kn, k] with kn = min(n, k)."""
+        a = _rand((2, 4, 9), jnp.float32)
+        u, s, vt = ops.batched_svd(a)
+        assert u.shape == (2, 4, 4) and s.shape == (2, 4) \
+            and vt.shape == (2, 4, 9)
+        rec = np.einsum("bnk,bk,bkj->bnj", np.asarray(u), np.asarray(s),
+                        np.asarray(vt))
+        np.testing.assert_allclose(rec, np.asarray(a), rtol=1e-3,
+                                   atol=1e-4)
+
+
 def _random_plan(rows, maxb, rng):
     """Random per-row slot layout: (blk, col, cnt, nb)."""
     cnt = rng.integers(0, maxb + 1, rows).astype(np.int32)
