@@ -105,6 +105,6 @@ def run(out_rows: List[str], records: Optional[List[Dict]] = None) -> None:
     shape, data, tree, bs = _build(64, m=16)
     for p in (2, 4, 8, 16):
         ds, _ = partition_h2(shape, data, p)
-        for comm in ("ppermute", "allgather"):
+        for comm in ("halo-plan", "ppermute", "allgather"):
             b = matvec_comm_bytes(ds, 16, comm)
             out_rows.append(f"hgemv_comm_p{p}_{comm},{0:.1f},bytes={b}")

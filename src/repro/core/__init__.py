@@ -15,5 +15,6 @@ from .construction import construct_h2, dense_reference           # noqa
 from .matvec import h2_matvec, h2_matvec_flops                    # noqa
 from .orthogonalize import orthogonalize                          # noqa
 from .compression import compress                                 # noqa
+from .halo import HaloPlan                                        # noqa
 from .dist import (partition_h2, make_dist_matvec,                # noqa
                    make_dist_compress, matvec_comm_bytes)

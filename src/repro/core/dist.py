@@ -11,14 +11,23 @@ sweeps.  This removes the root-GPU serialization the paper identifies as its
 
 Communication modes for the off-diagonal coupling phase (paper §4.1):
   - ``allgather``: gather the whole level (baseline, maximal volume)
-  - ``ppermute``: neighbor halo exchange via ``lax.ppermute`` with the static
-    halo radius derived from the block structure — the TPU-native analogue of
-    the paper's compressed send/recv node lists.  Volume drops from
-    ``(P-1)``x to ``2*rad``x per level (rad is O(C_sp / nodes-per-device)).
+  - ``ppermute``: broadcast halo exchange via ``lax.ppermute`` — ships each
+    device's *entire* level ``2*rad`` times (rad is the static device-distance
+    radius derived from the block structure).  Kept as the mid baseline.
+  - ``halo-plan`` (default): the compressed-plan exchange (``core/halo.py``,
+    DESIGN.md §3) — per-level send-row gather lists + recv-slot maps built at
+    ``partition_h2`` time ship only the nodes remote coupling rows actually
+    reference, one packed ``ppermute`` per neighbor offset.  The marshaled
+    coupling buffers are split into diagonal / off-diagonal twins so the
+    matvec issues every packed exchange up front, computes all diagonal GEMMs
+    plus the dense diagonal block while the halos are in flight, and finishes
+    the off-diagonal GEMMs from the landed buffers — the paper's §4.2
+    communication/computation overlap.  ``-bf16`` suffixes halve the payload.
 
-The diagonal/off-diagonal split + async collective scheduling reproduce the
-paper's communication/computation overlap (§4.2): the ppermute for each level
-is issued before the diagonal-block batched GEMMs so XLA can overlap them.
+The same plans drive the R-factor exchange in ``dist_orthogonalize_local``
+and the projection-map exchange in ``dist_compress_local`` (the node set a
+remote device references is identical for xhat rows, R factors, and
+projection maps).
 """
 from __future__ import annotations
 
@@ -33,6 +42,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
 
+from . import halo as _halo
+from .halo import HaloPlan, partition_level
 from .structure import H2Data, H2Shape, build_slot_plan, marshal_blocks
 
 
@@ -59,6 +70,14 @@ class DistH2Shape:
     row_maxb: Tuple[int, ...]             # max blocks/row (global levels 0..depth)
     symmetric: bool = True
     dense_maxb: int = 1                   # max dense blocks per leaf row
+    # compressed halo plan statics (core/halo.py): per branch level, the
+    # sorted nonzero device offsets present in the block list and the packed
+    # send-row caps per offset (global max over senders) — these size the
+    # one-ppermute-per-offset exchange and the comm model
+    br_offsets: Tuple[Tuple[int, ...], ...] = ()
+    br_caps: Tuple[Tuple[int, ...], ...] = ()
+    dense_offsets: Tuple[int, ...] = ()
+    dense_caps: Tuple[int, ...] = ()
 
     @property
     def leaves_per_dev(self) -> int:
@@ -86,6 +105,13 @@ class DistH2Data:
     every device's coupling phase is one gather + one batched GEMM —
     no segment-sum inside ``shard_map``.  Top levels and dense leaves get
     the same treatment (replicated / sharded respectively).
+
+    The compressed halo plan (``hp_br``/``hp_dense``, core/halo.py) splits
+    each level's marshaled buffer into a diagonal (own-column) twin
+    ``s_br_mar_diag`` and an off-diagonal twin ``s_br_mar_off`` whose slot
+    columns index the landed packed-exchange buffer — the layout behind the
+    ``halo-plan`` overlap schedule.  Only the branch levels and the dense
+    leaves carry plans; top levels are replicated and never communicate.
     """
     u_leaf: jax.Array                     # [P*nl_loc, m, k]
     v_leaf: jax.Array
@@ -111,6 +137,13 @@ class DistH2Data:
     s_top_mar: List[jax.Array]            # [2**l, k, maxb_l*k]
     pd_col: jax.Array                     # [P*nl_loc*dmaxb] int32 global col
     dense_mar: jax.Array                  # [P*nl_loc, m, dmaxb*m]
+    # compressed halo plans + diag/off marshaled twins (core/halo.py)
+    hp_br: List[HaloPlan]                 # l=lc..depth
+    hp_dense: HaloPlan
+    s_br_mar_diag: List[jax.Array]        # [P*nloc_l, k, maxb_d_l*k]
+    s_br_mar_off: List[jax.Array]         # [P*off_cap_l, k, k] (slab form)
+    dense_mar_diag: jax.Array             # [P*nl_loc, m, dmaxb_d*m]
+    dense_mar_off: jax.Array              # [P*doff_cap, m, m] (slab form)
 
     def tree_flatten(self):
         return ((self.u_leaf, self.v_leaf, tuple(self.e_br), tuple(self.f_br),
@@ -120,16 +153,21 @@ class DistH2Data:
                  self.dense, self.d_rows, self.d_cols,
                  tuple(self.pb_blk), tuple(self.pb_col), tuple(self.s_br_mar),
                  tuple(self.pt_blk), tuple(self.pt_col), tuple(self.s_top_mar),
-                 self.pd_col, self.dense_mar), None)
+                 self.pd_col, self.dense_mar,
+                 tuple(self.hp_br), self.hp_dense,
+                 tuple(self.s_br_mar_diag), tuple(self.s_br_mar_off),
+                 self.dense_mar_diag, self.dense_mar_off), None)
 
     @classmethod
     def tree_unflatten(cls, aux, ch):
         (u, v, eb, fb, sb, sbr, sbc, et, ft, st, str_, stc, de, dr, dc,
-         pbb, pbc, sbm, ptb, ptc, stm, pdc, dm) = ch
+         pbb, pbc, sbm, ptb, ptc, stm, pdc, dm,
+         hpb, hpd, smd, smo, dmd, dmo) = ch
         return cls(u, v, list(eb), list(fb), list(sb), list(sbr), list(sbc),
                    list(et), list(ft), list(st), list(str_), list(stc),
                    de, dr, dc, list(pbb), list(pbc), list(sbm),
-                   list(ptb), list(ptc), list(stm), pdc, dm)
+                   list(ptb), list(ptc), list(stm), pdc, dm,
+                   list(hpb), hpd, list(smd), list(smo), dmd, dmo)
 
 
 def dist_specs(dshape: DistH2Shape, axis) -> DistH2Data:
@@ -138,6 +176,12 @@ def dist_specs(dshape: DistH2Shape, axis) -> DistH2Data:
     rep = P()
     lc, depth = dshape.lc, dshape.depth
     nbr = depth - lc + 1
+
+    def plan_spec(n_offsets: int) -> HaloPlan:
+        return HaloPlan(send=[sh] * n_offsets, comb_idx=sh, diag_blk=sh,
+                        diag_col=sh, bnd_rows=sh, rowpos=sh, off_blk=sh,
+                        off_idx=sh, blk_idx=sh)
+
     return DistH2Data(
         u_leaf=sh, v_leaf=sh,
         e_br=[sh] * nbr, f_br=[sh] * nbr,
@@ -147,7 +191,11 @@ def dist_specs(dshape: DistH2Shape, axis) -> DistH2Data:
         dense=sh, d_rows=sh, d_cols=sh,
         pb_blk=[sh] * nbr, pb_col=[sh] * nbr, s_br_mar=[sh] * nbr,
         pt_blk=[rep] * lc, pt_col=[rep] * lc, s_top_mar=[rep] * lc,
-        pd_col=sh, dense_mar=sh)
+        pd_col=sh, dense_mar=sh,
+        hp_br=[plan_spec(len(dshape.br_offsets[i])) for i in range(nbr)],
+        hp_dense=plan_spec(len(dshape.dense_offsets)),
+        s_br_mar_diag=[sh] * nbr, s_br_mar_off=[sh] * nbr,
+        dense_mar_diag=sh, dense_mar_off=sh)
 
 
 # ---------------------------------------------------------------------------
@@ -164,50 +212,6 @@ def partition_h2(shape: H2Shape, data: H2Data, p: int
         raise ValueError(f"tree depth {shape.depth} < log2(P)={lc}")
     depth, m = shape.depth, shape.leaf_size
 
-    def split_level(l: int):
-        rows = np.asarray(data.s_rows[l])
-        cols = np.asarray(data.s_cols[l])
-        vals = np.asarray(data.s[l])
-        shift = l - lc
-        owner = rows >> shift
-        nloc = 1 << shift
-        counts = np.bincount(owner, minlength=p)
-        nbmax = max(int(counts.max()) if counts.size else 0, 1)
-        k = shape.ranks[l]
-        dt = vals.dtype if vals.size else np.float32
-        sv = np.zeros((p * nbmax, k, k), dt)
-        sr = np.zeros(p * nbmax, np.int32)
-        sc = np.zeros(p * nbmax, np.int32)
-        # per-device marshaling plan over the local nloc x maxb slot layout
-        nrow = np.bincount(rows, minlength=1 << l)
-        maxb = max(int(nrow.max()) if rows.size else 0, 1)
-        pb = np.full(p * nloc * maxb, nbmax, np.int32)       # nbmax = pad
-        pc = np.zeros(p * nloc * maxb, np.int32)
-        sv_mar = np.zeros((p * nloc, maxb, k, k), dt)
-        # default cols to the owner's first node (no spurious halo traffic)
-        for d in range(p):
-            sc[d * nbmax:(d + 1) * nbmax] = d * nloc
-            pc[d * nloc * maxb:(d + 1) * nloc * maxb] = d * nloc
-        fill = np.zeros(p, np.int64)
-        rowfill = np.zeros(p * nloc, np.int64)
-        for b in range(rows.shape[0]):
-            d = int(owner[b])
-            slot = d * nbmax + int(fill[d])
-            sv[slot] = vals[b]
-            sr[slot] = int(rows[b]) - d * nloc
-            sc[slot] = int(cols[b])
-            r_g = int(rows[b])                  # == d*nloc + local row
-            j = int(rowfill[r_g])
-            pb[r_g * maxb + j] = int(fill[d])   # local slab block index
-            pc[r_g * maxb + j] = int(cols[b])
-            sv_mar[r_g, j] = vals[b]
-            rowfill[r_g] += 1
-            fill[d] += 1
-        sv_mar = np.moveaxis(sv_mar, 1, 2).reshape(p * nloc, k, maxb * k)
-        col_owner = cols >> shift
-        rad = int(np.abs(col_owner - owner).max()) if rows.size else 0
-        return sv, sr, sc, nbmax, rad, pb, pc, sv_mar
-
     e_br = [np.zeros((p, 0, 0), np.float32)]
     f_br = [np.zeros((p, 0, 0), np.float32)]
     for l in range(lc + 1, depth + 1):
@@ -216,52 +220,30 @@ def partition_h2(shape: H2Shape, data: H2Data, p: int
 
     s_br, s_br_r, s_br_c, br_counts, br_rad = [], [], [], [], []
     pb_blk, pb_col, s_br_mar = [], [], []
+    hp_br, s_br_mar_diag, s_br_mar_off = [], [], []
+    br_offsets, br_caps = [], []
     for l in range(lc, depth + 1):
-        sv, sr, sc, nbmax, rad, pb, pc, sv_mar = split_level(l)
-        s_br.append(sv)
-        s_br_r.append(sr)
-        s_br_c.append(sc)
-        br_counts.append(nbmax)
-        br_rad.append(rad)
-        pb_blk.append(pb)
-        pb_col.append(pc)
-        s_br_mar.append(sv_mar)
+        lp = partition_level(np.asarray(data.s_rows[l]),
+                             np.asarray(data.s_cols[l]),
+                             np.asarray(data.s[l]), p, l - lc)
+        s_br.append(lp.sv)
+        s_br_r.append(lp.sr)
+        s_br_c.append(lp.sc)
+        br_counts.append(lp.nbmax)
+        br_rad.append(lp.rad)
+        pb_blk.append(lp.pb)
+        pb_col.append(lp.pc)
+        s_br_mar.append(lp.sv_mar)
+        hp_br.append(lp.plan())
+        s_br_mar_diag.append(lp.sv_mar_diag)
+        s_br_mar_off.append(lp.sv_mar_off)
+        br_offsets.append(lp.offsets)
+        br_caps.append(lp.caps)
 
     # dense leaves: same treatment at the leaf level
-    rows = np.asarray(data.d_rows)
-    cols = np.asarray(data.d_cols)
-    vals = np.asarray(data.dense)
-    shift = depth - lc
-    owner = rows >> shift
-    nloc = 1 << shift
-    counts = np.bincount(owner, minlength=p)
-    nbd = max(int(counts.max()) if counts.size else 0, 1)
-    dv = np.zeros((p * nbd, m, m), vals.dtype)
-    dr = np.zeros(p * nbd, np.int32)
-    dc = np.zeros(p * nbd, np.int32)
-    nrow = np.bincount(rows, minlength=1 << depth)
-    dmaxb = max(int(nrow.max()) if rows.size else 0, 1)
-    pd_col = np.zeros(p * nloc * dmaxb, np.int32)
-    dv_mar = np.zeros((p * nloc, dmaxb, m, m), vals.dtype)
-    for d in range(p):
-        dc[d * nbd:(d + 1) * nbd] = d * nloc
-        pd_col[d * nloc * dmaxb:(d + 1) * nloc * dmaxb] = d * nloc
-    fill = np.zeros(p, np.int64)
-    rowfill = np.zeros(p * nloc, np.int64)
-    for b in range(rows.shape[0]):
-        d = int(owner[b])
-        slot = d * nbd + int(fill[d])
-        dv[slot] = vals[b]
-        dr[slot] = int(rows[b]) - d * nloc
-        dc[slot] = int(cols[b])
-        r_g = int(rows[b])
-        j = int(rowfill[r_g])
-        pd_col[r_g * dmaxb + j] = int(cols[b])
-        dv_mar[r_g, j] = vals[b]
-        rowfill[r_g] += 1
-        fill[d] += 1
-    dv_mar = np.moveaxis(dv_mar, 1, 2).reshape(p * nloc, m, dmaxb * m)
-    d_rad = int(np.abs((cols >> shift) - owner).max()) if rows.size else 0
+    ld = partition_level(np.asarray(data.d_rows), np.asarray(data.d_cols),
+                         np.asarray(data.dense), p, depth - lc)
+    nbd, d_rad, dmaxb = ld.nbmax, ld.rad, ld.pc.shape[0] // (1 << depth)
 
     # replicated top levels: the global slot plan + marshaled blocks
     pt_blk, pt_col, s_top_mar = [], [], []
@@ -279,7 +261,9 @@ def partition_h2(shape: H2Shape, data: H2Data, p: int
         top_counts=tuple(shape.coupling_counts[:lc]),
         dense_count=nbd, dense_radius=d_rad,
         row_maxb=shape.row_maxb or tuple([0] * (depth + 1)),
-        symmetric=shape.symmetric, dense_maxb=dmaxb)
+        symmetric=shape.symmetric, dense_maxb=dmaxb,
+        br_offsets=tuple(br_offsets), br_caps=tuple(br_caps),
+        dense_offsets=ld.offsets, dense_caps=ld.caps)
 
     ddata = DistH2Data(
         u_leaf=jnp.asarray(np.asarray(data.u_leaf)),
@@ -296,13 +280,19 @@ def partition_h2(shape: H2Shape, data: H2Data, p: int
         s_top=[jnp.asarray(np.asarray(data.s[l])) for l in range(lc)],
         s_top_rows=[jnp.asarray(np.asarray(data.s_rows[l])) for l in range(lc)],
         s_top_cols=[jnp.asarray(np.asarray(data.s_cols[l])) for l in range(lc)],
-        dense=jnp.asarray(dv), d_rows=jnp.asarray(dr), d_cols=jnp.asarray(dc),
+        dense=jnp.asarray(ld.sv), d_rows=jnp.asarray(ld.sr),
+        d_cols=jnp.asarray(ld.sc),
         pb_blk=[jnp.asarray(x) for x in pb_blk],
         pb_col=[jnp.asarray(x) for x in pb_col],
         s_br_mar=[jnp.asarray(x) for x in s_br_mar],
         pt_blk=pt_blk, pt_col=pt_col, s_top_mar=s_top_mar,
-        pd_col=jnp.asarray(pd_col),
-        dense_mar=jnp.asarray(dv_mar))
+        pd_col=jnp.asarray(ld.pc),
+        dense_mar=jnp.asarray(ld.sv_mar),
+        hp_br=hp_br, hp_dense=ld.plan(),
+        s_br_mar_diag=[jnp.asarray(x) for x in s_br_mar_diag],
+        s_br_mar_off=[jnp.asarray(x) for x in s_br_mar_off],
+        dense_mar_diag=jnp.asarray(ld.sv_mar_diag),
+        dense_mar_off=jnp.asarray(ld.sv_mar_off))
     return dshape, ddata
 
 
@@ -327,10 +317,6 @@ def _halo_exchange(x: jax.Array, axis, rad: int, p: int) -> jax.Array:
             perm = [(src, (src - delta) % p) for src in range(p)]
             chunks.append(jax.lax.ppermute(x, axis, perm))
     return jnp.concatenate(chunks, axis=0)
-
-
-def _axis_size(axis) -> None:
-    return jax.lax.axis_size(axis)
 
 
 # ---------------------------------------------------------------------------
@@ -404,18 +390,217 @@ def _coupling_phase(dshape: DistH2Shape, d: DistH2Data, xhat, xhat_top,
         yhat[l] = jnp.einsum("nkj,njv->nkv", s_mar,
                              xg.reshape(nloc, maxb * k, nv))
 
-    for l in range(lc):
+    _top_coupling(dshape, d, xhat_top, yhat_top, nv)
+    return yhat, yhat_top
+
+
+def _top_coupling(dshape: DistH2Shape, d: DistH2Data, xhat_top, yhat_top,
+                  nv: int) -> None:
+    """Replicated top-level coupling GEMMs (no communication)."""
+    for l in range(dshape.lc):
         nn = 1 << l
         k = dshape.ranks[l]
         if dshape.top_counts[l] == 0 or k == 0:
-            yhat_top[l] = jnp.zeros((nn, k, nv), xhat[depth].dtype)
+            yhat_top[l] = jnp.zeros((nn, k, nv), xhat_top[dshape.lc].dtype)
             continue
         s_mar = d.s_top_mar[l]
         maxb = s_mar.shape[-1] // k
         xg = jnp.take(xhat_top[l], d.pt_col[l], axis=0)
         yhat_top[l] = jnp.einsum("nkj,njv->nkv", s_mar,
                                  xg.reshape(nn, maxb * k, nv))
-    return yhat, yhat_top
+
+
+def _use_split(schedule: str, nloc: int, maxb: int, maxb_d: int,
+               n_bnd: int, maxb_o: int) -> bool:
+    """Static per-level schedule policy.
+
+    ``overlap`` always splits (the §4.2 diag/off twins — on hardware with
+    async collectives the off padding rides otherwise-idle time).
+    ``fused`` never splits (one combined GEMM per level from the landed
+    buffer — zero extra flops; each level's transfer still hides under the
+    other levels' GEMMs because every exchange is issued up front).
+    ``auto`` splits only where the split's padded volume is not larger —
+    on balanced grids interior rows keep ``maxb_d == maxb``, so the fused
+    form usually wins wherever overlap cannot be realized.
+    """
+    if schedule == "overlap":
+        return True
+    if schedule == "fused":
+        return False
+    return nloc * maxb_d + n_bnd * maxb_o < nloc * maxb
+
+
+def _coupling_phase_overlap(dshape: DistH2Shape, d: DistH2Data, xhat,
+                            xhat_top, x_leaves, axis, comm: str,
+                            backend: str = "jnp", schedule: str = "auto"):
+    """Compressed-halo coupling + dense phases on the §4.2 overlap schedule.
+
+    Program order (= XLA scheduling opportunity): (A) gather every level's
+    planned send rows (branch levels AND dense leaves), flatten and fuse
+    them per neighbor offset, and issue the packed exchange for the whole
+    matvec up front — one ``ppermute`` round-trip per neighbor distance;
+    (B) compute every diagonal (own-column) GEMM, the dense diagonal
+    block, and the replicated top levels while the permutes are in
+    flight (level ``lc`` sources from the C-level branch-root gather and
+    never exchanges); (C) slice the landed fused buffers back into
+    per-level halos and finish the off-diagonal GEMMs (or, for levels the
+    static policy left fused, the whole level's combined GEMM).  Returns
+    ``(yhat, yhat_top, y_dense)``.
+    """
+    depth, lc, p = dshape.depth, dshape.lc, dshape.p
+    m = dshape.leaf_size
+    nl = dshape.leaves_per_dev
+    nv = xhat[depth].shape[-1]
+    bf16 = comm.endswith("-bf16")
+    DENSE = depth + 1                          # key for the dense payload
+
+    # --- phase A: pack + fuse payloads per offset, one ppermute each
+    parts: Dict[int, List[jax.Array]] = {}     # offset -> flat payloads
+    seg: Dict[Tuple[int, int], Tuple[int, int]] = {}  # (key, off) -> (lo, sz)
+
+    def _pack(src, key, plan: HaloPlan, offsets):
+        for delta, idx in zip(offsets, plan.send):
+            if backend == "pallas":
+                from repro.kernels import ops as kops
+                packed = kops.halo_pack(src, idx)
+            else:
+                packed = jnp.take(src, idx, axis=0)
+            if bf16:
+                packed = packed.astype(jnp.bfloat16)
+            flat = packed.reshape(-1)
+            lst = parts.setdefault(delta, [])
+            seg[(key, delta)] = (sum(int(q.shape[0]) for q in lst),
+                                 int(flat.shape[0]))
+            lst.append(flat)
+
+    # level lc never exchanges: the C-level branch-root gather that feeds
+    # the replicated top sweep already delivered every device's xhat[lc]
+    # (xhat_top[lc]), so its coupling sources from that replica for free
+    if p > 1:
+        for l in range(lc + 1, depth + 1):
+            i = l - lc
+            if dshape.ranks[l] == 0 or not dshape.br_offsets[i]:
+                continue
+            _pack(xhat[l], l, d.hp_br[i], dshape.br_offsets[i])
+        _pack(x_leaves, DENSE, d.hp_dense, dshape.dense_offsets)
+    chunks: Dict[int, jax.Array] = {}
+    for delta, lst in parts.items():
+        payload = jnp.concatenate(lst) if len(lst) > 1 else lst[0]
+        if bf16:
+            # stop XLA hoisting the converts past the permute (which
+            # would ship f32 and round afterwards)
+            payload = jax.lax.optimization_barrier(payload)
+        perm = [(src, (src - delta) % p) for src in range(p)]
+        chunks[delta] = jax.lax.ppermute(payload, axis, perm)
+
+    def _landed(src, key, offsets, caps, width):
+        """[nloc + sum(caps), width-per-row ...] buffer in plan layout."""
+        pieces = [src]
+        for delta, cap in zip(offsets, caps):
+            lo, sz = seg[(key, delta)]
+            pieces.append(chunks[delta][lo:lo + sz]
+                          .reshape(cap, width, nv).astype(src.dtype))
+        return jnp.concatenate(pieces, axis=0)
+
+    def _split(i, k):
+        nloc_g = d.s_br_mar[i].shape[0]
+        return _use_split(schedule, nloc_g, d.s_br_mar[i].shape[-1] // k,
+                          d.s_br_mar_diag[i].shape[-1] // k,
+                          d.s_br_mar_off[i].shape[0],
+                          d.s_br_mar_off[i].shape[-1] // k)
+
+    d_split = _use_split(schedule, d.dense_mar.shape[0],
+                         d.dense_mar.shape[-1] // m,
+                         d.dense_mar_diag.shape[-1] // m,
+                         d.dense_mar_off.shape[0],
+                         d.dense_mar_off.shape[-1] // m)
+
+    # --- phase B: diagonal GEMMs + dense diagonal + replicated top
+    # (fused-schedule levels wait for their halo in phase C instead)
+    yhat: Dict[int, jax.Array] = {}
+    yhat_top: Dict[int, jax.Array] = {}
+    for l in range(lc, depth + 1):
+        i = l - lc
+        nloc = dshape.nodes_local(l)
+        k = dshape.ranks[l]
+        if k == 0:
+            yhat[l] = jnp.zeros((nloc, k, nv), xhat[depth].dtype)
+            continue
+        if l == lc and p > 1:
+            # sourced from the replicated C-level gather — local compute,
+            # one combined GEMM with the GLOBAL column plan
+            s_mar = d.s_br_mar[i]
+            maxb = s_mar.shape[-1] // k
+            xg = jnp.take(xhat_top[lc], d.pb_col[i], axis=0)
+            yhat[l] = jnp.einsum("nkj,njv->nkv", s_mar,
+                                 xg.reshape(nloc, maxb * k, nv))
+            continue
+        if not _split(i, k):
+            yhat[l] = None
+            continue
+        s_diag = d.s_br_mar_diag[i]            # [nloc, k, maxb_d*k]
+        maxb_d = s_diag.shape[-1] // k
+        xg = jnp.take(xhat[l], d.hp_br[i].diag_col, axis=0)
+        yhat[l] = jnp.einsum("nkj,njv->nkv", s_diag,
+                             xg.reshape(nloc, maxb_d * k, nv))
+    y_de = None
+    if d_split:
+        d_diag = d.dense_mar_diag              # [nl, m, dmaxb_d*m]
+        dmaxb_d = d_diag.shape[-1] // m
+        xg = jnp.take(x_leaves, d.hp_dense.diag_col, axis=0)
+        y_de = jnp.einsum("nkj,njv->nkv", d_diag,
+                          xg.reshape(nl, dmaxb_d * m, nv))
+    _top_coupling(dshape, d, xhat_top, yhat_top, nv)
+
+    # --- phase C: finish from the landed buffers.  Split levels add the
+    # off-diagonal correction: the off twin is row-compressed over the
+    # boundary rows and merges back scatter-free through the precomputed
+    # ``rowpos`` output permutation (core/halo.py).  Fused levels run
+    # their single combined GEMM sourced through ``comb_idx``.
+    def _off_merge(y, src, key, plan: HaloPlan, offsets, caps, s_off,
+                   width):
+        maxb_o = s_off.shape[-1] // width
+        if maxb_o == 0 or s_off.shape[0] == 0 or p == 1:
+            return y
+        buf = _landed(src, key, offsets, caps, width)
+        xg = jnp.take(buf, plan.off_idx, axis=0)
+        off = jnp.einsum("nkj,njv->nkv", s_off,
+                         xg.reshape(s_off.shape[0], maxb_o * width, nv))
+        corrected = jnp.take(y, plan.bnd_rows, axis=0) + off
+        return jnp.take(jnp.concatenate([y, corrected], axis=0),
+                        plan.rowpos, axis=0)
+
+    def _fused_level(src, key, plan: HaloPlan, offsets, caps, s_mar,
+                     width):
+        rows = s_mar.shape[0]
+        maxb = s_mar.shape[-1] // width
+        buf = _landed(src, key, offsets, caps, width) if p > 1 else src
+        xg = jnp.take(buf, plan.comb_idx, axis=0)
+        return jnp.einsum("nkj,njv->nkv", s_mar,
+                          xg.reshape(rows, maxb * width, nv))
+
+    for l in range(lc, depth + 1):
+        i = l - lc
+        k = dshape.ranks[l]
+        if k == 0 or (l == lc and p > 1):     # lc rode the C-level gather
+            continue
+        if yhat[l] is None:
+            yhat[l] = _fused_level(xhat[l], l, d.hp_br[i],
+                                   dshape.br_offsets[i], dshape.br_caps[i],
+                                   d.s_br_mar[i], k)
+        else:
+            yhat[l] = _off_merge(yhat[l], xhat[l], l, d.hp_br[i],
+                                 dshape.br_offsets[i], dshape.br_caps[i],
+                                 d.s_br_mar_off[i], k)
+    if y_de is None:
+        y_de = _fused_level(x_leaves, DENSE, d.hp_dense,
+                            dshape.dense_offsets, dshape.dense_caps,
+                            d.dense_mar, m)
+    else:
+        y_de = _off_merge(y_de, x_leaves, DENSE, d.hp_dense,
+                          dshape.dense_offsets, dshape.dense_caps,
+                          d.dense_mar_off, m)
+    return yhat, yhat_top, y_de
 
 
 def _local_downsweep(dshape: DistH2Shape, d: DistH2Data, yhat, yhat_top,
@@ -465,30 +650,46 @@ def _dense_phase(dshape: DistH2Shape, d: DistH2Data, x_leaves, axis,
 
 
 def dist_h2_matvec_local(dshape: DistH2Shape, d: DistH2Data, x: jax.Array,
-                         axis, comm: str = "ppermute") -> jax.Array:
+                         axis, comm: str = "halo-plan",
+                         backend: str = "jnp",
+                         schedule: str = "auto") -> jax.Array:
     """Per-device body (call inside shard_map). x: [n_local, nv]."""
     nv = x.shape[-1]
     x_leaves = x.reshape(dshape.leaves_per_dev, dshape.leaf_size, nv)
     xhat, xhat_top = _local_upsweep(dshape, d, x_leaves, axis)
-    yhat, yhat_top = _coupling_phase(dshape, d, xhat, xhat_top, axis, comm)
+    if comm in ("halo-plan", "halo-plan-bf16"):
+        yhat, yhat_top, y_de = _coupling_phase_overlap(
+            dshape, d, xhat, xhat_top, x_leaves, axis, comm, backend,
+            schedule)
+    else:
+        yhat, yhat_top = _coupling_phase(dshape, d, xhat, xhat_top, axis,
+                                         comm)
+        y_de = _dense_phase(dshape, d, x_leaves, axis, comm)
     y_lr = _local_downsweep(dshape, d, yhat, yhat_top, axis)
-    y_de = _dense_phase(dshape, d, x_leaves, axis, comm)
     return (y_lr + y_de).reshape(dshape.n_local(), nv)
 
 
 def make_dist_matvec(dshape: DistH2Shape, mesh: Mesh, axis,
-                     comm: str = "ppermute", nv_axis: Optional[str] = None):
+                     comm: str = "halo-plan", nv_axis: Optional[str] = None,
+                     backend: str = "jnp", schedule: str = "auto"):
     """Build the jitted distributed matvec for a mesh.
 
     ``axis``: mesh axis name (or tuple of names) carrying the block rows.
     ``nv_axis``: optional mesh axis to shard the vector batch over (the
     paper's multi-vector nv dimension — embarrassingly parallel).
+    ``backend="pallas"`` routes the halo-plan send packing through the
+    scalar-prefetch gather kernel (kernels/halo_pack.py).
+    ``schedule`` picks the halo-plan GEMM schedule per level (see
+    ``_use_split``): "overlap" = the §4.2 diag/off split, "fused" = one
+    combined GEMM per level from the landed buffer, "auto" = static flop
+    model.
     """
     specs = dist_specs(dshape, axis)
     xspec = P(axis, nv_axis)
 
     def fn(d: DistH2Data, x: jax.Array) -> jax.Array:
-        return dist_h2_matvec_local(dshape, d, x, axis, comm)
+        return dist_h2_matvec_local(dshape, d, x, axis, comm, backend,
+                                    schedule)
 
     shmapped = shard_map(
         fn, mesh=mesh,
@@ -537,23 +738,27 @@ def dist_orthogonalize_local(dshape: DistH2Shape, d: DistH2Data, axis
     """Distributed orthogonalization (symmetric structure).
 
     The S update needs the column node's R factor, which may live on a
-    neighbor — fetched with the same halo exchange as the matvec.
+    neighbor — fetched through the SAME compressed halo plan as the matvec
+    (the node set a remote device references is identical), with
+    ``blk_idx`` mapping each slab block to its column's landed-buffer slot.
     """
     assert dshape.symmetric, "distributed path assumes symmetric structure"
     depth, lc, p = dshape.depth, dshape.lc, dshape.p
-    me = jax.lax.axis_index(axis)
     q_leaf, new_e_br, new_e_top, r, r_top = _branch_orthogonalize(
         dshape, d.u_leaf, d.e_br, d.e_top, axis)
 
     s_br_new, s_top_new = [], []
     for l in range(lc, depth + 1):
         i = l - lc
-        nloc = dshape.nodes_local(l)
         rl = r[l]                                  # [nloc, k', k]
-        rad = dshape.br_radius[i] if p > 1 else 0
-        halo = _halo_exchange(rl, axis, rad, p)
-        idx = d.s_br_cols[i] - me * nloc + rad * nloc
-        r_cols = jnp.take(halo, idx, axis=0)
+        if l == lc and p > 1:
+            # the C-level gather feeding the top sweep already delivered
+            # every device's R factor — no exchange at level lc
+            r_cols = jnp.take(r_top[lc], d.s_br_cols[i], axis=0)
+        else:
+            buf = _halo.exchange(rl, d.hp_br[i], dshape.br_offsets[i],
+                                 axis, p) if p > 1 else rl
+            r_cols = jnp.take(buf, d.hp_br[i].blk_idx, axis=0)
         r_rows = jnp.take(rl, d.s_br_rows[i], axis=0)
         s_br_new.append(jnp.einsum("bij,bjk,blk->bil", r_rows, d.s_br[i],
                                    r_cols))
@@ -574,7 +779,10 @@ def dist_orthogonalize_local(dshape: DistH2Shape, d: DistH2Data, axis
         dense=d.dense, d_rows=d.d_rows, d_cols=d.d_cols,
         pb_blk=d.pb_blk, pb_col=d.pb_col, s_br_mar=d.s_br_mar,
         pt_blk=d.pt_blk, pt_col=d.pt_col, s_top_mar=d.s_top_mar,
-        pd_col=d.pd_col, dense_mar=d.dense_mar))
+        pd_col=d.pd_col, dense_mar=d.dense_mar,
+        hp_br=d.hp_br, hp_dense=d.hp_dense,
+        s_br_mar_diag=d.s_br_mar_diag, s_br_mar_off=d.s_br_mar_off,
+        dense_mar_diag=d.dense_mar_diag, dense_mar_off=d.dense_mar_off))
 
 
 def _stack_local(blocks, idx, n_nodes, maxb):
@@ -594,9 +802,20 @@ def _with_remarshaled(dshape: DistH2Shape, d_old: DistH2Data,
     s_br_mar = [marshal_blocks(d_new.s_br[l - lc], d_old.pb_blk[l - lc],
                                dshape.nodes_local(l))
                 for l in range(lc, depth + 1)]
+    s_br_mar_diag = [marshal_blocks(d_new.s_br[l - lc],
+                                    d_old.hp_br[l - lc].diag_blk,
+                                    dshape.nodes_local(l))
+                     for l in range(lc, depth + 1)]
+    # the off twin's row axis is the boundary-row set, not the node set
+    s_br_mar_off = [marshal_blocks(d_new.s_br[l - lc],
+                                   d_old.hp_br[l - lc].off_blk,
+                                   d_old.s_br_mar_off[l - lc].shape[0])
+                    for l in range(lc, depth + 1)]
     s_top_mar = [marshal_blocks(d_new.s_top[l], d_old.pt_blk[l], 1 << l)
                  for l in range(lc)]
     return dataclasses.replace(d_new, s_br_mar=s_br_mar,
+                               s_br_mar_diag=s_br_mar_diag,
+                               s_br_mar_off=s_br_mar_off,
                                s_top_mar=s_top_mar)
 
 
@@ -711,16 +930,18 @@ def dist_compress_local(dshape: DistH2Shape, d: DistH2Data,
         new_e_top[l] = gk.reshape(2 * stack.shape[0], rl, rp)
         p_top[l - 1] = truncation_project(gk, stack)
 
-    # ---- coupling projection (halo exchange for remote column maps) ----
+    # ---- coupling projection (planned exchange for remote column maps;
+    # level lc rides the C-level gather that opened the top sweep) ----
     s_br_new, s_top_new = [], []
     for l in range(lc, depth + 1):
         i = l - lc
-        nloc = dshape.nodes_local(l)
         pl_ = pmap_[l]
-        rad = dshape.br_radius[i] if p > 1 else 0
-        halo = _halo_exchange(pl_, axis, rad, p)
-        idx = d.s_br_cols[i] - me * nloc + rad * nloc
-        pc = jnp.take(halo, idx, axis=0)
+        if l == lc and p > 1:
+            pc = jnp.take(p_top[lc], d.s_br_cols[i], axis=0)
+        else:
+            buf = _halo.exchange(pl_, d.hp_br[i], dshape.br_offsets[i],
+                                 axis, p) if p > 1 else pl_
+            pc = jnp.take(buf, d.hp_br[i].blk_idx, axis=0)
         pr = jnp.take(pl_, d.s_br_rows[i], axis=0)
         s_br_new.append(jnp.einsum("brk,bkj,bsj->brs", pr, d.s_br[i], pc))
     for l in range(lc):
@@ -742,7 +963,10 @@ def dist_compress_local(dshape: DistH2Shape, d: DistH2Data,
         dense=d.dense, d_rows=d.d_rows, d_cols=d.d_cols,
         pb_blk=d.pb_blk, pb_col=d.pb_col, s_br_mar=d.s_br_mar,
         pt_blk=d.pt_blk, pt_col=d.pt_col, s_top_mar=d.s_top_mar,
-        pd_col=d.pd_col, dense_mar=d.dense_mar))
+        pd_col=d.pd_col, dense_mar=d.dense_mar,
+        hp_br=d.hp_br, hp_dense=d.hp_dense,
+        s_br_mar_diag=d.s_br_mar_diag, s_br_mar_off=d.s_br_mar_off,
+        dense_mar_diag=d.dense_mar_diag, dense_mar_off=d.dense_mar_off))
 
 
 def make_dist_compress(dshape: DistH2Shape, mesh: Mesh, axis,
@@ -763,24 +987,37 @@ def make_dist_compress(dshape: DistH2Shape, mesh: Mesh, axis,
 # communication model (for benchmarks / roofline)
 # ---------------------------------------------------------------------------
 
-def matvec_comm_bytes(dshape: DistH2Shape, nv: int, comm: str = "ppermute",
+def matvec_comm_bytes(dshape: DistH2Shape, nv: int, comm: str = "halo-plan",
                       bytes_per_el: int = 4) -> int:
-    """Per-device collective bytes of one distributed matvec."""
+    """Per-device collective bytes of one distributed matvec.
+
+    ``allgather`` ships ``(p-1)`` full level copies and broadcast
+    ``ppermute`` ``2*rad`` copies.  ``halo-plan`` ships only the
+    compressed send lists — ``sum(caps)`` rows per level, the paper's
+    §4.1 volume.  The branch-root gather is a tiled ``all_gather``: each
+    device receives the other ``p-1`` slices (its own it already holds).
+    ``-bf16`` payload modes halve ``bytes_per_el`` at the call site.
+    """
     total = 0
     k_lc = dshape.ranks[dshape.lc]
-    total += dshape.p * k_lc * nv * bytes_per_el          # branch-root gather
+    total += (dshape.p - 1) * k_lc * nv * bytes_per_el    # branch-root gather
     for l in range(dshape.lc, dshape.depth + 1):
         i = l - dshape.lc
         nloc = dshape.nodes_local(l)
-        blk = nloc * dshape.ranks[l] * nv * bytes_per_el
+        row = dshape.ranks[l] * nv * bytes_per_el
         if comm == "allgather":
-            total += (dshape.p - 1) * blk
+            total += (dshape.p - 1) * nloc * row
+        elif comm.startswith("halo-plan"):
+            if l > dshape.lc:      # level lc rides the branch-root gather
+                total += sum(dshape.br_caps[i]) * row
         else:
-            total += 2 * dshape.br_radius[i] * blk
+            total += 2 * dshape.br_radius[i] * nloc * row
     nl = dshape.leaves_per_dev
-    blk = nl * dshape.leaf_size * nv * bytes_per_el
+    row = dshape.leaf_size * nv * bytes_per_el
     if comm == "allgather":
-        total += (dshape.p - 1) * blk
+        total += (dshape.p - 1) * nl * row
+    elif comm.startswith("halo-plan"):
+        total += sum(dshape.dense_caps) * row
     else:
-        total += 2 * dshape.dense_radius * blk
+        total += 2 * dshape.dense_radius * nl * row
     return total

@@ -16,6 +16,7 @@ from . import batched_gemm as _bg
 from . import batched_qr as _bq
 from . import batched_svd as _bs
 from . import coupling_mv as _cm
+from . import halo_pack as _hp
 
 INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
 
@@ -69,3 +70,9 @@ def coupling_mv(s: jax.Array, x: jax.Array, blk: jax.Array, col: jax.Array,
                 cnt: jax.Array, *, maxb: int, **kw):
     return _cm.coupling_mv(s, x, blk, col, cnt, maxb=maxb,
                            interpret=INTERPRET, **kw)
+
+
+def halo_pack(x: jax.Array, idx: jax.Array, **kw) -> jax.Array:
+    """Scalar-prefetch gather of the halo plan's send rows (one packed
+    ppermute payload; see core/halo.py)."""
+    return _hp.halo_pack(x, idx, interpret=INTERPRET, **kw)

@@ -77,23 +77,39 @@ def synth_dist_shape(p: int, depth: int, m: int, k: int, stats: Dict
         return arr[-2] if len(arr) > 1 else default
 
     br_counts, br_rad, row_maxb = [], [], []
+    br_offsets, br_caps = [], []
     for l in range(depth + 1):
         row_maxb.append(int(level_stat(maxb, l, 8)) or 0)
     for l in range(lc, depth + 1):
         nloc = (1 << l) // p
         cnt = int(np.ceil(level_stat(per_row, l, 6) * nloc))
         br_counts.append(max(cnt, 1))
-        br_rad.append(1 if l > lc else min(2, p - 1))
+        rad = 1 if l > lc else min(2, p - 1)
+        br_rad.append(rad)
+        # compressed-plan statics: boundary-band send caps per offset (the
+        # interior of a regular grid never crosses devices, so the packed
+        # rows per neighbor are O(row_maxb), independent of nloc)
+        offs = tuple(d for d in range(-rad, rad + 1) if d != 0)
+        cap = min(nloc, max(row_maxb[l], 1))
+        br_offsets.append(offs)
+        br_caps.append(tuple([cap] * len(offs)))
     top_counts = tuple(int(np.ceil(level_stat(per_row, l, 0) * (1 << l)))
                        for l in range(lc))
     nbd = max(int(np.ceil(stats["dense_per_row"] * ((1 << depth) // p))), 1)
+    dense_maxb = max(int(np.ceil(stats["dense_per_row"])), 1)
+    nl_loc = (1 << depth) // p
+    dense_offs = (-1, 1)
+    dense_caps = (min(nl_loc, dense_maxb), min(nl_loc, dense_maxb))
     return DistH2Shape(
         n=m * (1 << depth), leaf_size=m, depth=depth,
         ranks=tuple([k] * (depth + 1)), p=p, lc=lc,
         br_counts=tuple(br_counts), br_radius=tuple(br_rad),
         top_counts=top_counts, dense_count=nbd, dense_radius=1,
         row_maxb=tuple(row_maxb), symmetric=True,
-        dense_maxb=max(int(np.ceil(stats["dense_per_row"])), 1))
+        dense_maxb=dense_maxb,
+        br_offsets=tuple(br_offsets), br_caps=tuple(br_caps),
+        dense_offsets=dense_offs,
+        dense_caps=dense_caps)
 
 
 def abstract_dist_data(ds: DistH2Shape, dtype=jnp.float32) -> DistH2Data:
@@ -135,6 +151,42 @@ def abstract_dist_data(ds: DistH2Shape, dtype=jnp.float32) -> DistH2Data:
         pt_col.append(sds(((1 << l) * maxb,), i32))
         s_top_mar.append(sds((1 << l, k, maxb * k), dtype))
     nl_loc_tot = nl
+    # compressed halo plan + diag/off marshaled twins: interior rows of a
+    # regular grid are diagonal-only, so the row-compressed off twin spans
+    # only the O(boundary) rows (bounded here by the summed send caps)
+    # while the diag twin keeps the full row_maxb slot width
+    from repro.core.halo import HaloPlan
+    hp_br, s_br_mar_diag, s_br_mar_off = [], [], []
+    for i, l in enumerate(range(ds.lc, ds.depth + 1)):
+        nloc = ds.nodes_local(l)
+        maxb = max(ds.row_maxb[l], 1)
+        n_bnd = min(nloc, sum(ds.br_caps[i]))
+        maxb_o = min(maxb, 4)
+        hp_br.append(HaloPlan(
+            send=[sds((p * cap,), i32) for cap in ds.br_caps[i]],
+            comb_idx=sds((p * nloc * maxb,), i32),
+            diag_blk=sds((p * nloc * maxb,), i32),
+            diag_col=sds((p * nloc * maxb,), i32),
+            bnd_rows=sds((p * n_bnd,), i32),
+            rowpos=sds((p * nloc,), i32),
+            off_blk=sds((p * n_bnd * maxb_o,), i32),
+            off_idx=sds((p * n_bnd * maxb_o,), i32),
+            blk_idx=sds((p * ds.br_counts[i],), i32)))
+        s_br_mar_diag.append(sds((p * nloc, k, maxb * k), dtype))
+        s_br_mar_off.append(sds((p * n_bnd, k, maxb_o * k), dtype))
+    nl_loc = nl // p
+    d_bnd = min(nl_loc, sum(ds.dense_caps))
+    dmaxb_o = min(ds.dense_maxb, 4)
+    hp_dense = HaloPlan(
+        send=[sds((p * cap,), i32) for cap in ds.dense_caps],
+        comb_idx=sds((nl * ds.dense_maxb,), i32),
+        diag_blk=sds((nl * ds.dense_maxb,), i32),
+        diag_col=sds((nl * ds.dense_maxb,), i32),
+        bnd_rows=sds((p * d_bnd,), i32),
+        rowpos=sds((nl,), i32),
+        off_blk=sds((p * d_bnd * dmaxb_o,), i32),
+        off_idx=sds((p * d_bnd * dmaxb_o,), i32),
+        blk_idx=sds((p * ds.dense_count,), i32))
     return DistH2Data(
         u_leaf=sds((nl, m, k), dtype), v_leaf=sds((nl, m, k), dtype),
         e_br=e_br, f_br=list(e_br),
@@ -146,7 +198,11 @@ def abstract_dist_data(ds: DistH2Shape, dtype=jnp.float32) -> DistH2Data:
         pb_blk=pb_blk, pb_col=pb_col, s_br_mar=s_br_mar,
         pt_blk=pt_blk, pt_col=pt_col, s_top_mar=s_top_mar,
         pd_col=sds((nl_loc_tot * ds.dense_maxb,), i32),
-        dense_mar=sds((nl_loc_tot, m, ds.dense_maxb * m), dtype))
+        dense_mar=sds((nl_loc_tot, m, ds.dense_maxb * m), dtype),
+        hp_br=hp_br, hp_dense=hp_dense,
+        s_br_mar_diag=s_br_mar_diag, s_br_mar_off=s_br_mar_off,
+        dense_mar_diag=sds((nl_loc_tot, m, ds.dense_maxb * m), dtype),
+        dense_mar_off=sds((p * d_bnd, m, dmaxb_o * m), dtype))
 
 
 def lower_h2_cell(kind: str, *, dim: int, nv: int, multi_pod: bool,
@@ -235,7 +291,7 @@ def main():
             try:
                 if cell.startswith("matvec"):
                     nv = int(cell[len("matvec"):] or 1)
-                    for comm in ("ppermute", "allgather"):
+                    for comm in ("halo-plan", "ppermute", "allgather"):
                         r = lower_h2_cell("matvec", dim=dim, nv=nv,
                                           multi_pod=args.multi_pod,
                                           per_dev_rows_log2=args.rows_log2,

@@ -3,6 +3,12 @@
 Prints one "OK <name>" line per passing check; the pytest wrapper asserts on
 them.  (Device count must be set before jax initializes, hence the
 subprocess.)
+
+Covers the three communication modes (halo-plan / ppermute / allgather) plus
+their bf16-payload variants, the compressed-plan comm model, a clustered 1D
+geometry that forces a halo radius >= 2 below the C-level, and the
+distributed compression path (whose R-factor / projection-map exchanges ride
+the same HaloPlan).
 """
 import os
 
@@ -25,6 +31,14 @@ from repro.core.dist import (partition_h2, make_dist_matvec,  # noqa: E402
                              dist_specs)
 
 
+def place(mesh, dshape, ddata):
+    specs = dist_specs(dshape, "blk")
+    dd = jax.tree.map(
+        lambda a, s: jax.device_put(a, NamedSharding(mesh, s)),
+        ddata, specs)
+    return dd
+
+
 def main():
     assert len(jax.devices()) == 8, jax.devices()
     mesh = jax.make_mesh((8,), ("blk",))
@@ -33,31 +47,83 @@ def main():
     shape, data, tree, bs = construct_h2(pts, exponential_kernel(0.1),
                                          leaf_size=16, cheb_p=4, eta=0.9)
     dshape, ddata = partition_h2(shape, data, 8)
-    print("OK partition", dshape.br_radius, dshape.dense_radius)
+    print("OK partition", dshape.br_radius, dshape.dense_radius,
+          dshape.br_caps)
 
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.standard_normal((shape.n, 4)), jnp.float32)
     y_ref = np.asarray(h2_matvec(shape, data, x))
 
-    # place the distributed data on the mesh
-    specs = dist_specs(dshape, "blk")
-    ddata_dev = jax.tree.map(
-        lambda a, s: jax.device_put(a, NamedSharding(mesh, s)),
-        ddata, specs)
+    ddata_dev = place(mesh, dshape, ddata)
     x_dev = jax.device_put(x, NamedSharding(mesh, P("blk", None)))
 
-    for comm in ("allgather", "ppermute"):
+    for comm in ("allgather", "ppermute", "halo-plan"):
         mv = make_dist_matvec(dshape, mesh, "blk", comm=comm)
         y = np.asarray(mv(ddata_dev, x_dev))
         err = np.linalg.norm(y - y_ref) / np.linalg.norm(y_ref)
         assert err < 1e-5, (comm, err)
         print(f"OK matvec_{comm}", err)
 
-    # comm model: ppermute strictly cheaper than allgather
+    # both halo-plan GEMM schedules: the §4.2 diag/off split twins and the
+    # fused combined-GEMM form must agree with the reference
+    for sched in ("overlap", "fused"):
+        mv = make_dist_matvec(dshape, mesh, "blk", comm="halo-plan",
+                              schedule=sched)
+        y = np.asarray(mv(ddata_dev, x_dev))
+        err = np.linalg.norm(y - y_ref) / np.linalg.norm(y_ref)
+        assert err < 1e-5, (sched, err)
+        print(f"OK matvec_halo-plan_{sched}", err)
+
+    # pallas send packing (kernels/halo_pack.py scalar-prefetch gather,
+    # interpret mode) composed with shard_map
+    mv = make_dist_matvec(dshape, mesh, "blk", comm="halo-plan",
+                          backend="pallas")
+    y = np.asarray(mv(ddata_dev, x_dev))
+    err = np.linalg.norm(y - y_ref) / np.linalg.norm(y_ref)
+    assert err < 1e-5, err
+    print("OK matvec_halo-plan_pallas", err)
+
+    # bf16-payload halos: compute stays f32, so only the exchanged values
+    # round — parity within bf16's ~3 decimal digits
+    for comm in ("ppermute-bf16", "halo-plan-bf16"):
+        mv = make_dist_matvec(dshape, mesh, "blk", comm=comm)
+        y = np.asarray(mv(ddata_dev, x_dev))
+        err = np.linalg.norm(y - y_ref) / np.linalg.norm(y_ref)
+        assert err < 2e-2, (comm, err)
+        print(f"OK matvec_{comm}", err)
+
+    # comm model: compressed plan strictly below broadcast, broadcast below
+    # allgather (paper §4.1 volume ordering)
+    b_hp = matvec_comm_bytes(dshape, 4, "halo-plan")
     b_pp = matvec_comm_bytes(dshape, 4, "ppermute")
     b_ag = matvec_comm_bytes(dshape, 4, "allgather")
-    assert b_pp < b_ag, (b_pp, b_ag)
-    print("OK comm_model", b_pp, b_ag)
+    assert b_hp < b_pp < b_ag, (b_hp, b_pp, b_ag)
+    print("OK comm_model", b_hp, b_pp, b_ag)
+
+    # ---- clustered 1D geometry: grading piles leaves up near 0, so wide
+    # blocks reach >= 2 devices away below the C-level (rad >= 2 halos) ----
+    n1 = 1024
+    pts1 = (((np.arange(n1) + 0.5) / n1) ** 8)[:, None]
+    shape1, data1, tree1, bs1 = construct_h2(pts1, exponential_kernel(0.2),
+                                             leaf_size=8, cheb_p=6, eta=0.9)
+    dshape1, ddata1 = partition_h2(shape1, data1, 8)
+    deep_rads = [dshape1.br_radius[i]
+                 for i, l in enumerate(range(dshape1.lc, dshape1.depth + 1))
+                 if dshape1.nodes_local(l) >= 2]
+    assert max(deep_rads) >= 2, (dshape1.br_radius, deep_rads)
+    x1 = jnp.asarray(rng.standard_normal((shape1.n, 4)), jnp.float32)
+    y1_ref = np.asarray(h2_matvec(shape1, data1, x1))
+    dd1 = place(mesh, dshape1, ddata1)
+    x1_dev = jax.device_put(x1, NamedSharding(mesh, P("blk", None)))
+    for comm in ("ppermute", "halo-plan"):
+        mv = make_dist_matvec(dshape1, mesh, "blk", comm=comm)
+        y1 = np.asarray(mv(dd1, x1_dev))
+        err = np.linalg.norm(y1 - y1_ref) / np.linalg.norm(y1_ref)
+        assert err < 1e-5, (comm, err)
+    b1_hp = matvec_comm_bytes(dshape1, 4, "halo-plan")
+    b1_pp = matvec_comm_bytes(dshape1, 4, "ppermute")
+    assert b1_hp < b1_pp, (b1_hp, b1_pp)
+    print("OK matvec_rad2", max(deep_rads), err, b1_hp, b1_pp)
 
     # distributed compression vs single-device compression
     tgt = tuple(min(10, k) for k in shape.ranks)
@@ -69,7 +135,7 @@ def main():
     # the compressed distributed matrix has the new ranks
     import dataclasses
     dshape_c = dataclasses.replace(dshape, ranks=tgt)
-    mv_c = make_dist_matvec(dshape_c, mesh, "blk", comm="ppermute")
+    mv_c = make_dist_matvec(dshape_c, mesh, "blk", comm="halo-plan")
     y_c = np.asarray(mv_c(cdd, x_dev))
     err_vs_ref = (np.linalg.norm(y_c - y_c_ref) /
                   np.linalg.norm(y_c_ref))
@@ -89,7 +155,7 @@ def main():
         lambda a, s: jax.device_put(a, NamedSharding(mesh2, s)),
         ddata2, specs2)
     x2 = jax.device_put(x, NamedSharding(mesh2, P("blk", "nv")))
-    mv2 = make_dist_matvec(dshape2, mesh2, "blk", comm="ppermute",
+    mv2 = make_dist_matvec(dshape2, mesh2, "blk", comm="halo-plan",
                            nv_axis="nv")
     y2 = np.asarray(mv2(dd2, x2))
     err2 = np.linalg.norm(y2 - y_ref) / np.linalg.norm(y_ref)

@@ -19,6 +19,10 @@ def test_distributed_h2_8dev():
     assert proc.returncode == 0, proc.stdout + proc.stderr
     out = proc.stdout
     for marker in ("OK partition", "OK matvec_allgather", "OK matvec_ppermute",
+                   "OK matvec_halo-plan", "OK matvec_halo-plan_overlap",
+                   "OK matvec_halo-plan_fused", "OK matvec_halo-plan_pallas",
+                   "OK matvec_ppermute-bf16",
+                   "OK matvec_halo-plan-bf16", "OK matvec_rad2",
                    "OK comm_model", "OK dist_compress", "OK matvec_2d_mesh",
                    "ALL_OK"):
         assert marker in out, (marker, out, proc.stderr)

@@ -336,6 +336,27 @@ class TestCouplingMV:
                                    rtol=1e-4, atol=1e-4)
 
 
+class TestHaloPack:
+    @pytest.mark.parametrize("n,cap,k,nv", [(8, 3, 4, 2), (16, 16, 8, 4),
+                                            (4, 1, 16, 1)])
+    def test_matches_take(self, n, cap, k, nv):
+        rng = np.random.default_rng(n * 10 + cap)
+        x = _rand((n, k, nv), jnp.float32)
+        idx = jnp.asarray(rng.integers(0, n, size=cap), jnp.int32)
+        out = ops.halo_pack(x, idx)
+        want = jnp.take(x, idx, axis=0)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want))
+
+    def test_padded_repeats(self):
+        """Plan padding repeats row 0 — the pack must just duplicate it."""
+        x = _rand((6, 4, 3), jnp.float32)
+        idx = jnp.asarray([5, 0, 0, 0], jnp.int32)
+        out = np.asarray(ops.halo_pack(x, idx))
+        np.testing.assert_allclose(out[0], np.asarray(x)[5])
+        for j in range(1, 4):
+            np.testing.assert_allclose(out[j], np.asarray(x)[0])
+
+
 class TestPipelineWithPallasBackend:
     """End-to-end H^2 matvec with the Pallas batched-GEMM backend."""
 
