@@ -21,7 +21,7 @@ import traceback
 from typing import Dict, List
 
 MODULES = ["accuracy", "hgemv", "compression_bench", "construction_bench",
-           "dist_bench", "fractional", "lm_step"]
+           "dist_bench", "solver_bench", "fractional", "lm_step"]
 
 
 def main() -> None:

@@ -12,12 +12,12 @@ from repro.core.matvec import h2_matvec
 from repro.core.compression import compress
 
 
-def main():
+def main(side: int = 64, leaf_size: int = 64):
     # 1. a 2D spatial-statistics kernel matrix (paper §6.1 test set)
-    pts = regular_grid_points(64, 2)                 # N = 4096 points
+    pts = regular_grid_points(side, 2)               # N = side^2 points
     kernel = exponential_kernel(correlation_length=0.1)
     shape, data, tree, bs = construct_h2(
-        pts, kernel, leaf_size=64, cheb_p=6, eta=0.9)
+        pts, kernel, leaf_size=leaf_size, cheb_p=6, eta=0.9)
     print(f"H2 matrix: N={shape.n}, depth={shape.depth}, "
           f"C_sp={bs.sparsity_constant()}, "
           f"low-rank scalars={shape.memory_lowrank():,} "
@@ -38,6 +38,7 @@ def main():
     print(f"compressed ranks per level: {cshape.ranks}")
     print(f"low-rank memory reduction: {ratio:.1f}x "
           f"(paper reports ~6x at scale); matvec error now {err2:.2e}")
+    return err, err2, ratio
 
 
 if __name__ == "__main__":

@@ -13,26 +13,41 @@ discretized on a regular grid (paper Eq. 9):  h^2 (D + K + C) u = b, with
        leading-order term gamma * (-div kappa grad)_h with gamma = h^(-2*beta)
        instead of the full locally-corrected quadrature constants of [8].
 
-Solver: preconditioned CG; M^{-1} = geometric-multigrid V-cycles on C
-(weighted-Jacobi smoothing, full-weighting restriction, bilinear
-prolongation) — the GMG stand-in for the paper's AMG.
+Solver: the Krylov subsystem (``repro.solvers``, DESIGN.md §7) — a fully
+jitted ``lax.while_loop`` PCG (or GMRES) preconditioned by geometric-
+multigrid V-cycles on ``gamma*C + diag(D)`` (weighted-Jacobi smoothing,
+full-weighting restriction, bilinear prolongation) — the GMG stand-in for
+the paper's AMG.  ``make_dist_solve``/``solve_distributed`` run the WHOLE
+iteration (halo-plan H^2 matvec, sharded stencil V-cycle, psum dot
+products) inside one ``shard_map`` program over the block-row mesh — the
+paper's §6.4 end-to-end workload with zero per-iteration host sync.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core.clustering import build_cluster_tree
 from repro.core.construction import construct_h2
 from repro.core.compression import compress
+from repro.core.dist import (DistH2Data, DistH2Shape, dist_h2_matvec_local,
+                             dist_specs, matvec_comm_bytes, partition_h2)
 from repro.core.kernels_fn import (diffusivity_2d, fractional_kernel_2d,
                                    fractional_kernel_2d_positive)
 from repro.core.matvec import h2_matvec
 from repro.core.structure import H2Data, H2Shape
+from repro.solvers import (TRACE_COUNTS, build_grid_mg, mg_halo_bytes,
+                           mg_precond_local, mg_specs, result_specs)
+from repro.solvers import gmres as _gmres
+from repro.solvers import pcg as _pcg
+from repro.solvers.mg import _apply_op as _mg_apply_op
 
 
 def interior_grid(n: int) -> np.ndarray:
@@ -163,122 +178,207 @@ def make_operator(prob: Dict) -> Callable[[jax.Array], jax.Array]:
 
 
 # ----------------------------------------------------------------------
-# geometric multigrid V-cycle on C (the preconditioner)
+# geometric multigrid V-cycle on C (the preconditioner) — built on the
+# solver subsystem's sharded stencil V-cycle (solvers/mg.py) at p=1
 # ----------------------------------------------------------------------
-
-def _restrict(r):
-    n = r.shape[0]
-    return 0.25 * (r[0::2, 0::2] + r[1::2, 0::2] + r[0::2, 1::2]
-                   + r[1::2, 1::2])
-
-
-def _prolong(e):
-    n = e.shape[0]
-    out = jnp.zeros((2 * n, 2 * n), e.dtype)
-    out = out.at[0::2, 0::2].set(e)
-    out = out.at[1::2, 0::2].set(e)
-    out = out.at[0::2, 1::2].set(e)
-    out = out.at[1::2, 1::2].set(e)
-    return out
-
 
 def make_preconditioner(prob: Dict, n_cycles: int = 2, nu: int = 3,
                         omega: float = 0.7):
     """V-cycles on gamma*C + diag(D) (the local part of the operator)."""
     n = prob["n"]
-    h0 = prob["h"]
-    gamma = prob["gamma"]
-    d0 = prob["d_diag"].reshape(n, n)
-    kappas = []
-    diags = []
-    k = prob["kappa"]
-    d = d0
-    nn, hh = n, h0
-    while nn >= 4:
-        kappas.append(k)
-        diags.append(d)
-        k = _restrict(k)
-        d = _restrict(d)
-        nn //= 2
-        hh *= 2
-
-    hs = [h0 * (2 ** i) for i in range(len(kappas))]
-
-    def smooth(u, b, k_, d_, h_, steps):
-        # weighted Jacobi on (gamma*C + D): diag = gamma*4*kbar/h^2 + d
-        kp = jnp.pad(k_, 1, mode="edge")
-        ksum = (0.5 * (kp[1:-1, 1:-1] + kp[2:, 1:-1]) +
-                0.5 * (kp[1:-1, 1:-1] + kp[:-2, 1:-1]) +
-                0.5 * (kp[1:-1, 1:-1] + kp[1:-1, 2:]) +
-                0.5 * (kp[1:-1, 1:-1] + kp[1:-1, :-2]))
-        diag = gamma * ksum / (h_ * h_) + d_
-        for _ in range(steps):
-            r = b - (gamma * apply_c(u, k_, h_) + d_ * u)
-            u = u + omega * r / diag
-        return u
-
-    def vcycle(level, b):
-        k_, d_, h_ = kappas[level], diags[level], hs[level]
-        u = jnp.zeros_like(b)
-        u = smooth(u, b, k_, d_, h_, nu)
-        if level + 1 < len(kappas):
-            r = b - (gamma * apply_c(u, k_, h_) + d_ * u)
-            e = vcycle(level + 1, _restrict(r))
-            u = u + _prolong(e)
-            u = smooth(u, b, k_, d_, h_, nu)
-        return u
-
-    hh2 = h0 * h0
+    mg, arrs = build_grid_mg(prob["kappa"], prob["d_diag"].reshape(n, n),
+                             prob["gamma"], prob["h"], n, p=1,
+                             nu=nu, omega=omega, n_cycles=n_cycles)
 
     def precond(r: jax.Array) -> jax.Array:
-        b = r.reshape(n, n) / hh2
-        u = jnp.zeros_like(b)
-        for _ in range(n_cycles):
-            u = u + vcycle(0, b - (gamma * apply_c(u, kappas[0], h0)
-                                   + diags[0] * u))
-        return u.ravel()
+        return mg_precond_local(mg, arrs, r)
 
     return precond
 
 
 def pcg(apply_a, b, precond=None, tol=1e-8, maxiter=200):
-    """Preconditioned conjugate gradients; returns (x, iters, relres)."""
-    m = precond if precond is not None else (lambda r: r)
-    x = jnp.zeros_like(b)
-    r = b - apply_a(x)
-    z = m(r)
-    p = z
-    rz = jnp.vdot(r, z)
-    b_norm = float(jnp.linalg.norm(b))
-    iters = 0
-    for i in range(maxiter):
-        ap = apply_a(p)
-        alpha = rz / jnp.vdot(p, ap)
-        x = x + alpha * p
-        r = r - alpha * ap
-        res = float(jnp.linalg.norm(r))
-        iters = i + 1
-        if res <= tol * b_norm:
-            break
-        z = m(r)
-        rz_new = jnp.vdot(r, z)
-        beta = rz_new / rz
-        p = z + beta * p
-        rz = rz_new
-    return x, iters, res / b_norm
+    """Deprecated shim over ``repro.solvers.pcg`` — returns the legacy
+    ``(x, iters, relres)`` tuple.  ``tol`` is relative to ``||b||`` (the
+    historical implementation already converged on the relative residual
+    but host-looped every iteration)."""
+    warnings.warn("apps.fractional.pcg is deprecated; use repro.solvers.pcg",
+                  DeprecationWarning, stacklevel=2)
+    res = jax.jit(lambda rhs: _pcg(apply_a, rhs, precond, tol=tol,
+                                   maxiter=maxiter))(b)
+    return res.x, int(res.iters), float(res.relres)
 
 
 def solve(n: int, beta: float = 0.75, tol: float = 1e-8,
           h2_tol: float = 1e-6, use_precond: bool = True,
-          construction: str = "cheb") -> Dict:
+          construction: str = "cheb", method: str = "pcg",
+          maxiter: int = 200) -> Dict:
     prob = FractionalProblem(n, beta=beta, h2_tol=h2_tol,
                              construction=construction).build()
-    apply_a = jax.jit(make_operator(prob))
+    apply_a = make_operator(prob)
     b = jnp.ones((n * n,), jnp.float32) * (2.0 / n) ** 2   # h^2 * 1
     pre = make_preconditioner(prob) if use_precond else None
-    x, iters, relres = pcg(apply_a, b, pre, tol=tol)
-    return {"u": np.asarray(x).reshape(n, n), "iters": iters,
-            "relres": relres, "prob": prob}
+    if method == "pcg":
+        solver = lambda rhs: _pcg(apply_a, rhs, pre, tol=tol,        # noqa: E731
+                                  maxiter=maxiter)
+    elif method == "gmres":
+        solver = lambda rhs: _gmres(apply_a, rhs, pre, m=30, tol=tol,  # noqa: E731
+                                    maxiter=maxiter)
+    else:
+        raise ValueError(f"unknown method {method!r}")
+    res = jax.jit(solver)(b)
+    return {"u": np.asarray(res.x).reshape(n, n), "iters": int(res.iters),
+            "relres": float(res.relres), "converged": bool(res.converged),
+            "history": np.asarray(res.res_history), "prob": prob}
+
+
+# ----------------------------------------------------------------------
+# distributed end-to-end solve (paper §6.4): one shard_map program per
+# solve — halo-plan H^2 matvec + sharded stencil + sharded V-cycle
+# ----------------------------------------------------------------------
+
+def build_dist_problem(prob: Dict, p: int, n_cycles: int = 2, nu: int = 3,
+                       omega: float = 0.7):
+    """Partition the fractional operator for ``p`` block rows.
+
+    Returns ``(dshape, mg, args, specs)`` where ``args = (ddata, aux,
+    mg_arrays)`` and ``specs`` the matching PartitionSpec pytree (pass
+    axis to ``spec_tree(axis)``).  ``aux`` carries the grid<->tree
+    transposition maps (sharded in row strips like the solver state); the
+    operator's local part ``D + gamma*C`` reuses the V-cycle's level-0
+    stencil arrays (``mg._apply_op``) instead of shipping a second copy.
+    """
+    n = prob["n"]
+    dshape, ddata = partition_h2(prob["shape"], prob["data"], p)
+    mg, mga = build_grid_mg(prob["kappa"], prob["d_diag"].reshape(n, n),
+                            prob["gamma"], prob["h"], n, p=p,
+                            nu=nu, omega=omega, n_cycles=n_cycles)
+    if p > 1 and not mg.sharded(0):
+        # power-of-two N = leaf*2^depth and p | n already imply
+        # n % 2p == 0 for every partitionable configuration
+        raise ValueError(f"grid side {n} too small to strip-shard over "
+                         f"p={p} devices (n % 2p != 0)")
+    aux = {
+        "perm": jnp.asarray(prob["perm"], jnp.int32),
+        "unperm": jnp.asarray(prob["unperm"], jnp.int32),
+    }
+
+    def spec_tree(axis):
+        return (dist_specs(dshape, axis),
+                {k: P(axis) for k in aux},
+                mg_specs(mg, axis))
+
+    return dshape, mg, (ddata, aux, mga), spec_tree
+
+
+def _dist_apply_a(dshape: DistH2Shape, d: DistH2Data, aux: Dict, mg,
+                  mga, x: jax.Array, axis, comm: str, n: int, h: float
+                  ) -> jax.Array:
+    """Per-device A u = h^2 (D + K + C) u; ``x``: grid-order row strip.
+
+    The H^2 kernel works in tree order — the grid<->tree transpositions
+    are device-boundary-crossing permutations, realized as one tiled
+    ``all_gather`` + local take each way (the top-tree replication
+    deviation already ships comparable volume; see DESIGN.md §7).  The
+    local term ``(D + gamma*C) u`` is the V-cycle's level-0 operator
+    (``mg._apply_op``: ppermute row halo, precomputed faces).
+    """
+    p = dshape.p
+    xf = jax.lax.all_gather(x, axis, axis=0, tiled=True) if p > 1 else x
+    xt = jnp.take(xf, aux["perm"], axis=0)[:, None]
+    ku_t = dist_h2_matvec_local(dshape, d, xt, axis, comm)[:, 0]
+    kf = jax.lax.all_gather(ku_t, axis, axis=0, tiled=True) if p > 1 \
+        else ku_t
+    ku = jnp.take(kf, aux["unperm"], axis=0)
+    u = x.reshape(n // p if p > 1 else n, n)
+    local = _mg_apply_op(mg, mga, 0, u, axis).reshape(x.shape)
+    return (h * h) * (ku + local)
+
+
+def make_dist_solve(prob: Dict, mesh: Mesh, axis="blk",
+                    method: str = "pcg", comm: str = "halo-plan",
+                    tol: float = 1e-8, maxiter: int = 200,
+                    use_precond: bool = True, restart: int = 30,
+                    n_cycles: int = 2, nu: int = 3, omega: float = 0.7
+                    ) -> Dict:
+    """One jitted shard_map program running the whole fractional solve.
+
+    Returns ``{"fn", "args", "specs", "dshape", "mg", "place"}``:
+    ``fn(ddata, aux, mg_arrays, b) -> SolveResult`` with every input
+    placed by ``place(args)`` / ``b`` sharded ``P(axis)`` in grid order.
+    """
+    p = mesh.shape[axis]
+    n, h = prob["n"], prob["h"]
+    dshape, mg, args, spec_tree = build_dist_problem(
+        prob, p, n_cycles=n_cycles, nu=nu, omega=omega)
+    specs = spec_tree(axis)
+
+    def local(d, aux, mga, b):
+        TRACE_COUNTS["dist_fractional"] += 1
+
+        def apply_a(x):
+            return _dist_apply_a(dshape, d, aux, mg, mga, x, axis, comm,
+                                 n, h)
+
+        pre = (lambda r: mg_precond_local(mg, mga, r, axis)) \
+            if use_precond else None
+        if method == "pcg":
+            return _pcg(apply_a, b, pre, tol=tol, maxiter=maxiter,
+                        axis=axis)
+        if method == "gmres":
+            return _gmres(apply_a, b, pre, m=restart, tol=tol,
+                          maxiter=maxiter, axis=axis)
+        raise ValueError(f"unknown method {method!r}")
+
+    fn = jax.jit(shard_map(local, mesh=mesh,
+                           in_specs=(*specs, P(axis)),
+                           out_specs=result_specs(P(axis)),
+                           check_vma=False))
+
+    def place(tree, tree_specs=specs):
+        return jax.tree.map(
+            lambda a, s: jax.device_put(a, NamedSharding(mesh, s)),
+            tree, tree_specs)
+
+    return {"fn": fn, "args": args, "specs": specs, "dshape": dshape,
+            "mg": mg, "place": place, "axis": axis}
+
+
+def solve_distributed(n: int, mesh: Mesh, axis="blk", beta: float = 0.75,
+                      tol: float = 1e-8, h2_tol: float = 1e-6,
+                      maxiter: int = 200, comm: str = "halo-plan",
+                      method: str = "pcg", use_precond: bool = True,
+                      construction: str = "cheb") -> Dict:
+    """End-to-end distributed fractional-diffusion solve on a mesh."""
+    prob = FractionalProblem(n, beta=beta, h2_tol=h2_tol,
+                             construction=construction).build()
+    parts = make_dist_solve(prob, mesh, axis, method=method, comm=comm,
+                            tol=tol, maxiter=maxiter,
+                            use_precond=use_precond)
+    b = jnp.ones((n * n,), jnp.float32) * prob["h"] ** 2
+    args = parts["place"](parts["args"])
+    b_dev = jax.device_put(b, NamedSharding(mesh, P(axis)))
+    res = parts["fn"](*args, b_dev)
+    return {"u": np.asarray(res.x).reshape(n, n), "iters": int(res.iters),
+            "relres": float(res.relres), "converged": bool(res.converged),
+            "history": np.asarray(res.res_history), "prob": prob,
+            "parts": parts, "placed_args": args, "b": b_dev}
+
+
+def dist_solve_comm_bytes(dshape: DistH2Shape, mg, comm: str = "halo-plan",
+                          bytes_per_el: int = 4) -> int:
+    """Modeled per-device collective bytes of ONE distributed PCG iteration
+    on the fractional operator: H^2 matvec exchange + the two grid<->tree
+    transposition gathers + the C-stencil row halo + the V-cycle halos
+    (``mg_halo_bytes``) + the three psum'd CG scalars."""
+    p = dshape.p
+    if p <= 1:
+        return 0
+    mv = matvec_comm_bytes(dshape, 1, comm, bytes_per_el)
+    transpose = 2 * (p - 1) * (dshape.n // p) * bytes_per_el
+    stencil = 2 * mg.levels[0] * bytes_per_el
+    psums = 3 * (p - 1) * bytes_per_el
+    return mv + transpose + stencil + mg_halo_bytes(mg, bytes_per_el) \
+        + psums
 
 
 def dense_reference_solution(n: int, beta: float = 0.75) -> np.ndarray:

@@ -223,7 +223,31 @@ def lower_h2_cell(kind: str, *, dim: int, nv: int, multi_pod: bool,
     with mesh:
         data_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
                                is_leaf=lambda x: isinstance(x, P))
-        if kind == "matvec":
+        if kind == "pcg":
+            # a whole distributed PCG solve as ONE program: the while_loop
+            # body is the halo-plan matvec + psum'd dot products
+            # (repro/solvers); trip count is data-dependent, so jaxpr
+            # flops are per-iteration lower bounds
+            from repro.solvers import pcg as _kpcg
+            from repro.solvers.distributed import result_specs
+            x_sds = jax.ShapeDtypeStruct((ds.n,), jnp.float32)
+            x_sh = NamedSharding(mesh, P(axis))
+
+            def step(d, b):
+                def apply_a(xl):
+                    return dist_h2_matvec_local(ds, d, xl[:, None], axis,
+                                                comm)[:, 0]
+                return _kpcg(apply_a, b, tol=1e-6, maxiter=10, axis=axis)
+
+            out_sp = result_specs(P(axis))
+            fn = shard_map(step, mesh=mesh, in_specs=(specs, P(axis)),
+                           out_specs=out_sp, check_vma=False)
+            out_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), out_sp,
+                                  is_leaf=lambda x: isinstance(x, P))
+            lowered = jax.jit(fn, in_shardings=(data_sh, x_sh),
+                              out_shardings=out_sh).lower(data_sds, x_sds)
+            jx = jaxpr_cost.analyze(fn, data_sds, x_sds)
+        elif kind == "matvec":
             x_sds = jax.ShapeDtypeStruct((ds.n, nv), jnp.float32)
             x_sh = NamedSharding(mesh, P(axis, "model" if nv >= 16 else None))
 
@@ -261,6 +285,9 @@ def lower_h2_cell(kind: str, *, dim: int, nv: int, multi_pod: bool,
            "Csp": stats["Csp"]}
     if kind == "matvec":
         res["model_comm_bytes"] = matvec_comm_bytes(ds, nv, comm)
+    elif kind == "pcg":
+        from repro.solvers import krylov_comm_bytes
+        res["model_comm_bytes_per_iter"] = krylov_comm_bytes(ds, 1, comm)
     t0 = time.time()
     compiled = lowered.compile()
     res["compile_s"] = round(time.time() - t0, 1)
@@ -283,7 +310,7 @@ def main():
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--rows-log2", type=int, default=19)
     ap.add_argument("--out", default="dryrun_h2.json")
-    ap.add_argument("--cells", default="matvec1,matvec64,compress")
+    ap.add_argument("--cells", default="matvec1,matvec64,compress,pcg")
     args = ap.parse_args()
     results = []
     for dim in (2, 3):
@@ -301,6 +328,16 @@ def main():
                               f"flops/dev={r['flops_per_device']:.3e} "
                               f"coll={sum(r['collectives'].values()):.3e}B "
                               f"compile={r['compile_s']}s")
+                elif cell == "pcg":
+                    r = lower_h2_cell("pcg", dim=dim, nv=1,
+                                      multi_pod=args.multi_pod,
+                                      per_dev_rows_log2=args.rows_log2,
+                                      comm="halo-plan")
+                    results.append(r)
+                    print(f"OK {r['cell']}: "
+                          f"flops/dev={r['flops_per_device']:.3e} "
+                          f"coll={sum(r['collectives'].values()):.3e}B "
+                          f"compile={r['compile_s']}s")
                 else:
                     r = lower_h2_cell("compress", dim=dim, nv=1,
                                       multi_pod=args.multi_pod,

@@ -1,0 +1,84 @@
+"""Whole-solve ``shard_map`` Krylov programs over the distributed H^2 stack.
+
+The builders here wrap the axis-aware solver bodies of ``solvers.krylov``
+around ``core.dist.dist_h2_matvec_local`` so the ENTIRE iteration — matvec
+(compressed-halo exchange, ``comm="halo-plan"`` by default), dot products
+(``psum``), preconditioner, convergence test — is one jitted ``shard_map``
+program: zero per-iteration host round-trips, one dispatch per solve.
+
+``make_dist_krylov`` solves ``(shift*I + A) x = b`` for the plain H^2
+operator ``A`` (``shift > 0`` gives the SPD covariance-solve form
+``I + A``).  The end-to-end fractional-diffusion solve, whose operator
+composes the H^2 kernel with a sharded stencil and grid<->tree
+transpositions, lives in ``apps.fractional`` and reuses the same solver
+bodies.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.compat import shard_map
+from repro.core.dist import (DistH2Data, DistH2Shape, dist_h2_matvec_local,
+                             dist_specs, matvec_comm_bytes)
+
+from .krylov import TRACE_COUNTS, SolveResult, block_cg, gmres, pcg
+
+
+def result_specs(x_spec) -> SolveResult:
+    """PartitionSpec pytree for a SolveResult: the solution is sharded like
+    ``b``; every psum-reduced scalar/history is replicated."""
+    return SolveResult(x=x_spec, iters=P(), relres=P(), converged=P(),
+                       res_history=P())
+
+
+def make_dist_krylov(dshape: DistH2Shape, mesh: Mesh, axis,
+                     method: str = "pcg", comm: str = "halo-plan",
+                     shift: float = 0.0, tol: float = 1e-8,
+                     maxiter: int = 200, restart: int = 30,
+                     schedule: str = "auto", backend: str = "jnp"):
+    """Jitted ``(d, b) -> SolveResult`` solving ``(shift*I + A) x = b``.
+
+    ``method``: ``"pcg"`` | ``"gmres"`` (b: [n]) or ``"block_cg"``
+    (b: [n, nv], every RHS in one program).  ``d`` and ``b`` must be placed
+    with ``dist_specs(dshape, axis)`` / ``P(axis)`` shardings.
+    """
+    if method not in ("pcg", "gmres", "block_cg"):
+        raise ValueError(f"unknown method {method!r}")
+    specs = dist_specs(dshape, axis)
+    multi = method == "block_cg"
+    bspec = P(axis, None) if multi else P(axis)
+
+    def local(d: DistH2Data, b: jax.Array) -> SolveResult:
+        TRACE_COUNTS[f"dist_{method}"] += 1
+
+        def apply_a(x):
+            xm = x if multi else x[:, None]
+            y = dist_h2_matvec_local(dshape, d, xm, axis, comm, backend,
+                                     schedule)
+            y = y if multi else y[:, 0]
+            return shift * x + y if shift else y
+
+        if method == "pcg":
+            return pcg(apply_a, b, tol=tol, maxiter=maxiter, axis=axis)
+        if method == "block_cg":
+            return block_cg(apply_a, b, tol=tol, maxiter=maxiter, axis=axis)
+        return gmres(apply_a, b, m=restart, tol=tol, maxiter=maxiter,
+                     axis=axis)
+
+    shmapped = shard_map(local, mesh=mesh, in_specs=(specs, bspec),
+                         out_specs=result_specs(bspec), check_vma=False)
+    return jax.jit(shmapped)
+
+
+def krylov_comm_bytes(dshape: DistH2Shape, nv: int = 1,
+                      comm: str = "halo-plan",
+                      bytes_per_el: int = 4) -> int:
+    """Per-device collective bytes of ONE Krylov iteration on the plain H^2
+    operator: the matvec exchange plus the psum'd scalar reductions (CG:
+    three scalars per iteration, each an all-reduce)."""
+    psums = 3 * nv * bytes_per_el * max(dshape.p - 1, 0)
+    return matvec_comm_bytes(dshape, nv, comm, bytes_per_el) + psums

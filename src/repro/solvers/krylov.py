@@ -1,0 +1,298 @@
+"""Fully-jitted Krylov solvers (DESIGN.md §7).
+
+Every solver here is a pure traceable function built on ``lax.while_loop``
+— no Python-level convergence loop, no host round-trips — so a whole solve
+lowers to ONE XLA program.  The same bodies run single-device and
+distributed: every reduction goes through ``_dot``/``_norm`` which take an
+optional mesh ``axis``; with ``axis=None`` they are plain sums, inside
+``shard_map`` they are ``psum`` reductions over the block-row axis.  The
+distributed variants in ``solvers/distributed.py`` are therefore the same
+algorithms, word for word, wrapped in one ``shard_map`` program.
+
+Tolerance semantics (uniform across all solvers, and the fix for the old
+``apps.fractional.pcg`` which mixed absolute and relative checks): ``tol``
+is always **relative to ||b||** — convergence is ``||r|| <= tol * ||b||``,
+``relres`` and every entry of ``res_history`` are ``||r|| / ||b||``.  For
+``b = 0`` the exact solution ``x = 0`` is returned immediately with
+``iters = 0``, ``relres = 0`` and ``converged = True``.
+
+``res_history`` is a fixed-length ``[maxiter + 1]`` array (jit needs static
+shapes): entry ``i`` is the relative residual after ``i`` iterations;
+entries past the solve's end are NaN.  For ``block_cg`` the history is
+``[maxiter + 1, nv]`` and a column converged at iteration ``k`` carries its
+final value forward while other columns still run (rows past the LAST
+column's finish are NaN; per-column counts live in ``iters``).  For GMRES
+the history is per *restart* (entry ``i`` = relative true residual after
+``i`` restart cycles).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+# retrace counters, keyed by program name (test hook — mirrors
+# core/compression.TRACE_COUNTS)
+TRACE_COUNTS = {"pcg": 0, "block_cg": 0, "gmres": 0,
+                "dist_pcg": 0, "dist_block_cg": 0, "dist_gmres": 0,
+                "dist_fractional": 0}
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class SolveResult:
+    """Solution + convergence record of one Krylov solve.
+
+    ``x``: the solution (same shape as ``b``); ``iters``: iterations taken
+    (int32 scalar; for ``block_cg`` an ``[nv]`` vector, for ``gmres`` the
+    number of restart cycles x m); ``relres``: final ``||r|| / ||b||``;
+    ``converged``: ``||r|| <= tol * ||b||``; ``res_history``: see module
+    docstring.
+    """
+    x: jax.Array
+    iters: jax.Array
+    relres: jax.Array
+    converged: jax.Array
+    res_history: jax.Array
+
+    def tree_flatten(self):
+        return ((self.x, self.iters, self.relres, self.converged,
+                 self.res_history), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, ch):
+        return cls(*ch)
+
+
+def _psum(v, axis):
+    return jax.lax.psum(v, axis) if axis is not None else v
+
+
+def _dot(u: jax.Array, v: jax.Array, axis=None) -> jax.Array:
+    """Global <u, v> over all elements; psum over ``axis`` when sharded."""
+    return _psum(jnp.sum(u * v), axis)
+
+
+def _norm(u: jax.Array, axis=None) -> jax.Array:
+    return jnp.sqrt(_dot(u, u, axis))
+
+
+def _cdot(u: jax.Array, v: jax.Array, axis=None) -> jax.Array:
+    """Per-column <u_j, v_j> for [n, nv] blocks -> [nv]."""
+    return _psum(jnp.sum(u * v, axis=0), axis)
+
+
+def _identity(r):
+    return r
+
+
+def pcg(apply_a: Callable, b: jax.Array,
+        precond: Optional[Callable] = None, tol: float = 1e-8,
+        maxiter: int = 200, x0: Optional[jax.Array] = None,
+        axis=None) -> SolveResult:
+    """Preconditioned conjugate gradients as one ``lax.while_loop``.
+
+    ``apply_a``/``precond`` map arrays of ``b``'s shape to the same shape;
+    ``precond`` must apply a fixed SPD ``M^{-1}``.  Inside ``shard_map``
+    pass the mesh ``axis`` and per-device shards of ``b``.
+    """
+    TRACE_COUNTS["pcg"] += 1
+    m = precond if precond is not None else _identity
+    b_norm = _norm(b, axis)
+    bn_safe = jnp.where(b_norm > 0, b_norm, 1.0)
+    x = jnp.zeros_like(b) if x0 is None else x0
+    r = b - apply_a(x) if x0 is not None else b
+    z = m(r)
+    p = z
+    rz = _dot(r, z, axis)
+    res = _norm(r, axis)
+    hist = jnp.full((maxiter + 1,), jnp.nan, b.dtype)
+    hist = hist.at[0].set(res / bn_safe)
+
+    def cond(state):
+        k, _, _, _, _, res_k, _ = state
+        return (k < maxiter) & (res_k > tol * b_norm)
+
+    def body(state):
+        k, x, r, p, rz, _, hist = state
+        ap = apply_a(p)
+        pap = _dot(p, ap, axis)
+        alpha = rz / jnp.where(pap != 0, pap, 1.0)
+        x = x + alpha * p
+        r = r - alpha * ap
+        res = _norm(r, axis)
+        z = m(r)
+        rz_new = _dot(r, z, axis)
+        beta = rz_new / jnp.where(rz != 0, rz, 1.0)
+        p = z + beta * p
+        hist = hist.at[k + 1].set(res / bn_safe)
+        return k + 1, x, r, p, rz_new, res, hist
+
+    state = (jnp.int32(0), x, r, p, rz, res, hist)
+    k, x, r, _, _, res, hist = jax.lax.while_loop(cond, body, state)
+    relres = res / bn_safe
+    return SolveResult(x=x, iters=k, relres=relres,
+                       converged=res <= tol * b_norm, res_history=hist)
+
+
+def block_cg(apply_a: Callable, b: jax.Array,
+             precond: Optional[Callable] = None, tol: float = 1e-8,
+             maxiter: int = 200, axis=None) -> SolveResult:
+    """Batched multi-RHS CG: ``b`` is ``[n, nv]``, ``apply_a`` maps
+    ``[n, nv] -> [n, nv]`` (the H^2 matvec's native multi-vector form).
+
+    Each column runs an independent CG recurrence (per-column alpha/beta),
+    all fused into one program so the nv matvecs share every dispatch.
+    Converged columns are frozen via masking; ``iters`` is per-column.
+    """
+    TRACE_COUNTS["block_cg"] += 1
+    m = precond if precond is not None else _identity
+    b_norm = jnp.sqrt(_cdot(b, b, axis))                   # [nv]
+    bn_safe = jnp.where(b_norm > 0, b_norm, 1.0)
+    x = jnp.zeros_like(b)
+    r = b
+    z = m(r)
+    p = z
+    rz = _cdot(r, z, axis)
+    res = jnp.sqrt(_cdot(r, r, axis))
+    nv = b.shape[1]
+    maxit = int(maxiter)
+    hist = jnp.full((maxit + 1, nv), jnp.nan, b.dtype)
+    hist = hist.at[0].set(res / bn_safe)
+    iters0 = jnp.zeros((nv,), jnp.int32)
+
+    def cond(state):
+        k, _, _, _, _, res_k, _, _ = state
+        return (k < maxit) & jnp.any(res_k > tol * b_norm)
+
+    def body(state):
+        k, x, r, p, rz, res, hist, iters = state
+        active = res > tol * b_norm                        # [nv]
+        ap = apply_a(p)
+        pap = _cdot(p, ap, axis)
+        alpha = jnp.where(active, rz / jnp.where(pap != 0, pap, 1.0), 0.0)
+        x = x + alpha[None, :] * p
+        r = jnp.where(active[None, :], r - alpha[None, :] * ap, r)
+        res = jnp.sqrt(_cdot(r, r, axis))
+        z = m(r)
+        rz_new = jnp.where(active, _cdot(r, z, axis), rz)
+        beta = jnp.where(active, rz_new / jnp.where(rz != 0, rz, 1.0), 0.0)
+        p = jnp.where(active[None, :], z + beta[None, :] * p, p)
+        hist = hist.at[k + 1].set(jnp.where(active, res / bn_safe,
+                                            hist[k]))
+        return (k + 1, x, r, p, rz_new, res, hist,
+                iters + active.astype(jnp.int32))
+
+    state = (jnp.int32(0), x, r, p, rz, res, hist, iters0)
+    _, x, r, _, _, res, hist, iters = jax.lax.while_loop(cond, body, state)
+    relres = res / bn_safe
+    return SolveResult(x=x, iters=iters, relres=relres,
+                       converged=jnp.all(res <= tol * b_norm),
+                       res_history=hist)
+
+
+def _arnoldi(op: Callable, v0: jax.Array, m: int, axis=None):
+    """m steps of Arnoldi with two-pass classical Gram-Schmidt.
+
+    Returns (V [m+1, n...], H [m+1, m]).  The CGS projections are
+    vectorized over the whole basis with an ``i <= j`` mask so the inner
+    loop is a fixed-shape ``fori_loop`` (jit/shard_map friendly); the
+    second pass restores the orthogonality one-pass CGS loses in f32.
+    Happy breakdown (``h_{j+1,j} ~ 0``) zeroes the next basis vector, which
+    leaves the least-squares solve of H well-posed via lstsq.
+    """
+    n_shape = v0.shape
+    V = jnp.zeros((m + 1,) + n_shape, v0.dtype).at[0].set(v0)
+    H = jnp.zeros((m + 1, m), v0.dtype)
+
+    def vdot_all(V, w):
+        # <V_i, w> for all i, psum'd when sharded: [m+1]
+        d = jnp.sum(V * w[None], axis=tuple(range(1, w.ndim + 1)))
+        return _psum(d, axis)
+
+    def step(j, carry):
+        V, H = carry
+        w = op(V[j])
+        mask = (jnp.arange(m + 1) <= j).astype(w.dtype)
+        h1 = vdot_all(V, w) * mask
+        w = w - jnp.tensordot(h1, V, axes=1)
+        h2 = vdot_all(V, w) * mask                 # CGS second pass
+        w = w - jnp.tensordot(h2, V, axes=1)
+        h = h1 + h2
+        hn = _norm(w, axis)
+        v_next = jnp.where(hn > 0, w / jnp.where(hn > 0, hn, 1.0), 0.0)
+        V = V.at[j + 1].set(v_next)
+        H = H.at[:, j].set(h.at[j + 1].set(hn))
+        return V, H
+
+    return jax.lax.fori_loop(0, m, step, (V, H))
+
+
+def gmres(apply_a: Callable, b: jax.Array,
+          precond: Optional[Callable] = None, m: int = 30,
+          tol: float = 1e-8, maxiter: int = 200,
+          x0: Optional[jax.Array] = None, axis=None) -> SolveResult:
+    """Restarted GMRES(m), left-preconditioned, as one jitted program.
+
+    Each restart runs exactly ``m`` Arnoldi steps on ``M^{-1} A`` (a fixed
+    trip count keeps the loop a static-shape ``fori_loop``), solves the
+    ``(m+1) x m`` least-squares problem by ridge-regularized normal
+    equations (breakdown-safe), and updates ``x``.  The outer
+    ``while_loop`` restarts until the TRUE residual ``||b - A x||`` meets
+    ``tol * ||b||`` or ``ceil(maxiter / m)`` cycles have run.
+    ``res_history`` is per restart; ``iters = cycles * m``.
+    """
+    TRACE_COUNTS["gmres"] += 1
+    mp = precond if precond is not None else _identity
+    n_restarts = max(1, -(-int(maxiter) // int(m)))
+    b_norm = _norm(b, axis)
+    bn_safe = jnp.where(b_norm > 0, b_norm, 1.0)
+    x = jnp.zeros_like(b) if x0 is None else x0
+    r = b - apply_a(x) if x0 is not None else b
+    res = _norm(r, axis)
+    hist = jnp.full((n_restarts + 1,), jnp.nan, b.dtype)
+    hist = hist.at[0].set(res / bn_safe)
+
+    def op(v):
+        return mp(apply_a(v))
+
+    def cond(state):
+        k, _, _, res_k, _, progress = state
+        # a rejected restart leaves the state bitwise unchanged — further
+        # cycles would deterministically recompute the same rejected
+        # correction, so stagnation ends the solve
+        return (k < n_restarts) & (res_k > tol * b_norm) & progress
+
+    def body(state):
+        # the true residual of the accepted iterate rides the loop state,
+        # so each restart costs m+1 operator applications, not m+2
+        k, x, r, res_old, hist, _ = state
+        z = mp(r)
+        beta = _norm(z, axis)
+        beta_safe = jnp.where(beta > 0, beta, 1.0)
+        V, H = _arnoldi(op, z / beta_safe, m, axis)
+        # min_y ||beta e1 - H y||: ridge-regularized normal equations keep
+        # the solve well-posed through happy breakdown (zero H columns)
+        e1 = jnp.zeros((m + 1,), b.dtype).at[0].set(beta)
+        g = H.T @ H
+        ridge = 1e-7 * (jnp.trace(g) / m + 1e-30)
+        y = jnp.linalg.solve(g + ridge * jnp.eye(m, dtype=b.dtype),
+                             H.T @ e1)
+        x_new = x + jnp.tensordot(y, V[:m], axes=1)
+        r_new = b - apply_a(x_new)
+        res_new = _norm(r_new, axis)
+        # accept only improving restarts: at the dtype's stagnation floor
+        # the correction is pure rounding noise and must not grow ||r||
+        better = res_new < res_old
+        x = jnp.where(better, x_new, x)
+        r = jnp.where(better, r_new, r)
+        res = jnp.where(better, res_new, res_old)
+        hist = hist.at[k + 1].set(res / bn_safe)
+        return k + 1, x, r, res, hist, better
+
+    state = (jnp.int32(0), x, r, res, hist, jnp.bool_(True))
+    k, x, _, res, hist, _ = jax.lax.while_loop(cond, body, state)
+    return SolveResult(x=x, iters=k * m, relres=res / bn_safe,
+                       converged=res <= tol * b_norm, res_history=hist)

@@ -1,0 +1,264 @@
+"""Sharded geometric-multigrid V-cycle preconditioner (DESIGN.md §7).
+
+Re-derivation of the GMG stand-in for the paper's AMG (previously a
+host-looped, single-device closure in ``apps/fractional.py``) as a
+stencil V-cycle on ``gamma*C + diag(D)`` that runs entirely inside one
+``shard_map`` program:
+
+  - the grid is sharded in contiguous **row strips** ([n, n] -> [n/p, n]
+    per device), matching the flat-vector ``P(axis)`` sharding of the
+    Krylov state;
+  - the 5-point kappa-weighted stencil's face coefficients are precomputed
+    globally per level on the host and sharded with the grid, so smoothing
+    needs only a one-row halo of ``u`` — two ``ppermute`` shifts per
+    stencil application (zero rows at the domain boundary = the volume
+    constraint's Dirichlet condition);
+  - restriction / prolongation are local while the strip keeps an even
+    number of rows (level ``l`` stays sharded iff ``n_l % 2p == 0``);
+  - below that, the coarse grid is **gathered to every device**
+    (``all_gather``, the psum-style coarsening of the tiny top levels) and
+    the remaining V-cycle tail runs replicated — the same
+    replicate-the-top-tree deviation as the distributed H^2 sweeps
+    (DESIGN.md §2), removing any root-device serialization.
+
+``p = 1`` builds the identical numerics with no communication primitives,
+so the single-device ``apps.fractional.make_preconditioner`` is now a thin
+wrapper over this module.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class GridMG:
+    """Static V-cycle description (shapes, schedule, scalars)."""
+    n: int
+    p: int
+    levels: Tuple[int, ...]          # grid side per level (n, n/2, ..., 4)
+    hs: Tuple[float, ...]
+    n_sharded: int                   # leading levels kept in strip layout
+    gamma: float
+    nu: int = 3
+    omega: float = 0.7
+    n_cycles: int = 2
+
+    def sharded(self, l: int) -> bool:
+        return self.p > 1 and l < self.n_sharded
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class MGArrays:
+    """Per-level stencil data.  Levels ``< n_sharded`` are sharded over the
+    mesh axis (leading/row dim), the tail is replicated — ``mg_specs``
+    builds the matching PartitionSpec pytree."""
+    ke: List[jax.Array]              # face coefficients [n_l, n_l]
+    kw: List[jax.Array]
+    kn: List[jax.Array]
+    ks: List[jax.Array]
+    dd: List[jax.Array]              # restricted diag(D) [n_l, n_l]
+    jd: List[jax.Array]              # Jacobi diagonal gamma*ksum/h^2 + dd
+
+    def tree_flatten(self):
+        return ((tuple(self.ke), tuple(self.kw), tuple(self.kn),
+                 tuple(self.ks), tuple(self.dd), tuple(self.jd)), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, ch):
+        return cls(*(list(c) for c in ch))
+
+
+def _restrict_np(r: np.ndarray) -> np.ndarray:
+    return 0.25 * (r[0::2, 0::2] + r[1::2, 0::2] + r[0::2, 1::2]
+                   + r[1::2, 1::2])
+
+
+def stencil_faces(k: np.ndarray):
+    """Edge-padded face-averaged diffusivity coefficients of the 5-point
+    ``-div kappa grad`` stencil (neighbor order: row+1, row-1, col+1,
+    col-1)."""
+    kp = np.pad(k, 1, mode="edge")
+    ke = 0.5 * (kp[1:-1, 1:-1] + kp[2:, 1:-1])
+    kw = 0.5 * (kp[1:-1, 1:-1] + kp[:-2, 1:-1])
+    kn = 0.5 * (kp[1:-1, 1:-1] + kp[1:-1, 2:])
+    ks = 0.5 * (kp[1:-1, 1:-1] + kp[1:-1, :-2])
+    return ke, kw, kn, ks
+
+
+def build_grid_mg(kappa, d_diag, gamma: float, h0: float, n: int, p: int = 1,
+                  nu: int = 3, omega: float = 0.7, n_cycles: int = 2
+                  ) -> Tuple[GridMG, MGArrays]:
+    """Host-side pyramid build: restrict kappa/diag(D), precompute faces.
+
+    ``kappa``/``d_diag``: [n, n] grid-order arrays.  ``p > 1`` requires
+    ``n % p == 0`` (row-strip layout).
+    """
+    if p > 1 and n % p != 0:
+        raise ValueError(f"grid side {n} not divisible by p={p}")
+    k = np.asarray(kappa, np.float32)
+    d = np.asarray(d_diag, np.float32)
+    levels, hs = [], []
+    arrs = MGArrays([], [], [], [], [], [])
+    nn, hh = n, h0
+    while nn >= 4:
+        ke, kw, kn, ks = stencil_faces(k)
+        jd = gamma * (ke + kw + kn + ks) / (hh * hh) + d
+        for lst, a in zip((arrs.ke, arrs.kw, arrs.kn, arrs.ks, arrs.dd,
+                           arrs.jd), (ke, kw, kn, ks, d, jd)):
+            lst.append(jnp.asarray(a))
+        levels.append(nn)
+        hs.append(hh)
+        k = _restrict_np(k)
+        d = _restrict_np(d)
+        nn //= 2
+        hh *= 2
+    n_sharded = 0
+    if p > 1:
+        for n_l in levels:
+            if n_l % (2 * p) != 0:
+                break
+            n_sharded += 1
+    mg = GridMG(n=n, p=p, levels=tuple(levels), hs=tuple(hs),
+                n_sharded=n_sharded, gamma=gamma, nu=nu, omega=omega,
+                n_cycles=n_cycles)
+    return mg, arrs
+
+
+def mg_specs(mg: GridMG, axis) -> MGArrays:
+    """PartitionSpec pytree matching ``MGArrays`` for ``shard_map``."""
+    from jax.sharding import PartitionSpec as P
+    specs = [P(axis) if mg.sharded(l) else P()
+             for l in range(len(mg.levels))]
+    return MGArrays(ke=list(specs), kw=list(specs), kn=list(specs),
+                    ks=list(specs), dd=list(specs), jd=list(specs))
+
+
+# ---------------------------------------------------------------------------
+# device-side V-cycle
+# ---------------------------------------------------------------------------
+
+def _halo_rows(u: jax.Array, axis, p: int):
+    """One-row halo from the row-strip neighbors (zeros at the boundary)."""
+    top = jax.lax.ppermute(u[-1:], axis,
+                           [(s, s + 1) for s in range(p - 1)])
+    bot = jax.lax.ppermute(u[:1], axis,
+                           [(s, s - 1) for s in range(1, p)])
+    return top, bot
+
+
+def _apply_op(mg: GridMG, a: MGArrays, l: int, u: jax.Array, axis
+              ) -> jax.Array:
+    """(gamma*C + diag(D)) u on level ``l`` (strip or replicated layout)."""
+    if mg.sharded(l):
+        top, bot = _halo_rows(u, axis, mg.p)
+    else:
+        top = jnp.zeros_like(u[:1])
+        bot = jnp.zeros_like(u[:1])
+    ue = jnp.concatenate([top, u, bot], axis=0)       # rows halo
+    uc = jnp.pad(u, ((0, 0), (1, 1)))                 # cols: Dirichlet
+    h = mg.hs[l]
+    lap = (a.ke[l] * (ue[2:] - u) + a.kw[l] * (ue[:-2] - u)
+           + a.kn[l] * (uc[:, 2:] - u) + a.ks[l] * (uc[:, :-2] - u))
+    return mg.gamma * (-lap / (h * h)) + a.dd[l] * u
+
+
+def _smooth(mg: GridMG, a: MGArrays, l: int, u, b, axis):
+    for _ in range(mg.nu):
+        r = b - _apply_op(mg, a, l, u, axis)
+        u = u + mg.omega * r / a.jd[l]
+    return u
+
+
+def _restrict(r):
+    return 0.25 * (r[0::2, 0::2] + r[1::2, 0::2] + r[0::2, 1::2]
+                   + r[1::2, 1::2])
+
+
+def _prolong(e):
+    n0, n1 = e.shape
+    out = jnp.zeros((2 * n0, 2 * n1), e.dtype)
+    out = out.at[0::2, 0::2].set(e)
+    out = out.at[1::2, 0::2].set(e)
+    out = out.at[0::2, 1::2].set(e)
+    out = out.at[1::2, 1::2].set(e)
+    return out
+
+
+def _vcycle(mg: GridMG, a: MGArrays, l: int, b, axis):
+    u = _smooth(mg, a, l, jnp.zeros_like(b), b, axis)
+    if l + 1 < len(mg.levels):
+        r = b - _apply_op(mg, a, l, u, axis)
+        rc = _restrict(r)
+        if mg.sharded(l) and not mg.sharded(l + 1):
+            # sharded -> replicated switch: gather the coarse strips so the
+            # tiny tail levels run redundantly on every device
+            rlc = rc.shape[0]
+            rc_full = jax.lax.all_gather(rc, axis, axis=0, tiled=True)
+            e = _vcycle(mg, a, l + 1, rc_full, axis)
+            me = jax.lax.axis_index(axis)
+            e = jax.lax.dynamic_slice_in_dim(e, me * rlc, rlc, axis=0)
+        else:
+            e = _vcycle(mg, a, l + 1, rc, axis)
+        u = u + _prolong(e)
+        u = _smooth(mg, a, l, u, b, axis)
+    return u
+
+
+def mg_precond_local(mg: GridMG, a: MGArrays, r: jax.Array, axis=None
+                     ) -> jax.Array:
+    """Apply ``n_cycles`` V-cycles to the flat residual ``r``.
+
+    Single-device: ``r`` is the full [n*n] grid-order vector.  Inside
+    ``shard_map`` (``p > 1``): ``r`` is the device's [n*n/p] row strip.
+    The incoming residual is scaled by ``1/h^2`` — the preconditioner
+    inverts the UNSCALED local operator ``gamma*C + diag(D)`` while the
+    fractional system carries the paper's ``h^2`` prefactor.
+    """
+    h0 = mg.hs[0]
+    strip = mg.p > 1
+    rows = (mg.n // mg.p) if strip else mg.n
+    b = r.reshape(rows, mg.n) / (h0 * h0)
+    gathered = strip and mg.n_sharded == 0
+    if gathered:     # too coarse to shard even level 0: replicate throughout
+        b = jax.lax.all_gather(b, axis, axis=0, tiled=True)
+    u = jnp.zeros_like(b)
+    for _ in range(mg.n_cycles):
+        u = u + _vcycle(mg, a, 0, b - _apply_op(mg, a, 0, u, axis), axis)
+    if gathered:
+        me = jax.lax.axis_index(axis)
+        u = jax.lax.dynamic_slice_in_dim(u, me * rows, rows, axis=0)
+    return u.reshape(r.shape)
+
+
+def mg_halo_bytes(mg: GridMG, bytes_per_el: int = 4) -> int:
+    """Per-device collective bytes of ONE preconditioner application.
+
+    Each stencil application on a sharded level ships two halo rows; one
+    V-cycle does ``2*nu + 2`` stencil applications per non-coarsest level
+    (two smooths + the restriction residual + the cycle-entry residual is
+    counted once at level 0 by the caller loop) and ``nu`` on the coarsest.
+    The sharded->replicated switch adds one coarse-grid all_gather.
+    """
+    if mg.p <= 1:
+        return 0
+    if mg.n_sharded == 0:
+        # gathered path: one full-grid all_gather per application (the
+        # replicated V-cycle itself is then communication-free)
+        return (mg.p - 1) * (mg.n // mg.p) * mg.n * bytes_per_el
+    total = 0
+    nlev = len(mg.levels)
+    for l in range(min(mg.n_sharded, nlev)):
+        apps = mg.nu if l == nlev - 1 else 2 * mg.nu + 1
+        if l == 0:
+            apps += 1                       # cycle-entry residual
+        total += apps * 2 * mg.levels[l] * bytes_per_el
+    if 0 < mg.n_sharded < nlev:
+        n_sw = mg.levels[mg.n_sharded]      # replicated coarse side
+        total += (mg.p - 1) * (n_sw * n_sw // mg.p) * bytes_per_el
+    return total * mg.n_cycles

@@ -9,6 +9,13 @@ their bf16-payload variants, the compressed-plan comm model, a clustered 1D
 geometry that forces a halo radius >= 2 below the C-level, and the
 distributed compression path (whose R-factor / projection-map exchanges ride
 the same HaloPlan).
+
+Solver subsystem (repro/solvers/): distributed PCG / GMRES parity vs the
+single-device solvers at p in {2, 8} on uniform-2D and graded-1D
+geometries — same iteration count, matching solutions, no retrace on
+repeat calls, callback-free jaxpr — plus the end-to-end distributed
+fractional-diffusion solve against the single-device and dense-direct
+references.
 """
 import os
 
@@ -162,7 +169,138 @@ def main():
     assert err2 < 1e-5, err2
     print("OK matvec_2d_mesh", err2)
 
+    solver_checks(rng, {"uniform2d": (shape, data),
+                        "graded1d": (shape1, data1)})
+    mg_gathered_check(rng)
+    fractional_checks()
+
     print("ALL_OK")
+
+
+from jaxpr_utils import assert_callback_free as _assert_callback_free  # noqa: E402
+
+
+def solver_checks(rng, geometries):
+    """Distributed PCG/GMRES on (I + A) vs the single-device solvers.
+
+    Uniform geometry: exact iteration-count parity (the residual crosses
+    tol decisively).  Graded geometry: the ill-conditioned system's
+    residual HOVERS at the crossing for a few iterations, so psum
+    reassociation can legitimately shift the count by an iteration or
+    two — parity there is |delta| <= 2 with a looser solution check.
+    """
+    from repro.solvers import TRACE_COUNTS, gmres, make_dist_krylov, pcg
+
+    cfg = {"uniform2d": dict(tol=1e-6, slack=0, xerr=1e-4),
+           "graded1d": dict(tol=1e-4, slack=2, xerr=5e-3)}
+    for tag, (shp, dat) in geometries.items():
+        tol, slack, xerr = (cfg[tag][k] for k in ("tol", "slack", "xerr"))
+        b = jnp.asarray(rng.standard_normal(shp.n), jnp.float32)
+        apply_ref = lambda x: x + h2_matvec(shp, dat, x[:, None])[:, 0]  # noqa: E731
+        ref_p = jax.jit(lambda rhs: pcg(apply_ref, rhs, tol=tol,
+                                        maxiter=250))(b)
+        ref_g = jax.jit(lambda rhs: gmres(apply_ref, rhs, m=20, tol=tol,
+                                          maxiter=100))(b)
+        assert bool(ref_p.converged) and bool(ref_g.converged)
+        for p in (2, 8):
+            mesh_p = jax.make_mesh((p,), ("blk",))
+            dsp, ddp = partition_h2(shp, dat, p)
+            ddev = place(mesh_p, dsp, ddp)
+            bdev = jax.device_put(b, NamedSharding(mesh_p, P("blk")))
+
+            base = TRACE_COUNTS["dist_pcg"]
+            sv = make_dist_krylov(dsp, mesh_p, "blk", method="pcg",
+                                  shift=1.0, tol=tol, maxiter=250)
+            rp = sv(ddev, bdev)
+            err = (np.linalg.norm(np.asarray(rp.x) - np.asarray(ref_p.x))
+                   / np.linalg.norm(np.asarray(ref_p.x)))
+            assert bool(rp.converged)
+            assert abs(int(rp.iters) - int(ref_p.iters)) <= slack, \
+                (tag, p, int(rp.iters), int(ref_p.iters))
+            assert err < xerr, (tag, p, err)
+            sv(ddev, 2.0 * bdev)                 # cached: no retrace
+            assert TRACE_COUNTS["dist_pcg"] == base + 1
+            print(f"OK solver_pcg_{tag}_p{p}", int(rp.iters), err)
+
+            sg = make_dist_krylov(dsp, mesh_p, "blk", method="gmres",
+                                  shift=1.0, tol=tol, maxiter=100,
+                                  restart=20)
+            rg = sg(ddev, bdev)
+            errg = (np.linalg.norm(np.asarray(rg.x) - np.asarray(ref_g.x))
+                    / np.linalg.norm(np.asarray(ref_g.x)))
+            assert bool(rg.converged)
+            assert int(rg.iters) == int(ref_g.iters), \
+                (tag, p, int(rg.iters), int(ref_g.iters))
+            assert errg < xerr, (tag, p, errg)
+            print(f"OK solver_gmres_{tag}_p{p}", int(rg.iters), errg)
+
+            if tag == "uniform2d" and p == 8:
+                _assert_callback_free(sv, ddev, bdev)
+                print("OK solver_jaxpr_callback_free")
+
+
+def mg_gathered_check(rng):
+    """solvers/mg.py gathered fallback (p > 1 but the grid is too coarse
+    to strip-shard, n_sharded == 0): the strips are all_gather'ed, the
+    whole V-cycle runs replicated, and the own strip is sliced back —
+    must equal the p=1 preconditioner exactly."""
+    from repro.compat import shard_map
+    from repro.solvers.mg import (build_grid_mg, mg_halo_bytes,
+                                  mg_precond_local, mg_specs)
+
+    n, p = 8, 8
+    kappa = 1.0 + 0.5 * rng.random((n, n))
+    dd = 1.0 + rng.random((n, n))
+    mg1, a1 = build_grid_mg(kappa, dd, gamma=2.0, h0=0.25, n=n, p=1)
+    mg8, a8 = build_grid_mg(kappa, dd, gamma=2.0, h0=0.25, n=n, p=p)
+    assert mg8.n_sharded == 0, mg8
+    assert mg_halo_bytes(mg8) > 0
+    r = jnp.asarray(rng.standard_normal(n * n), jnp.float32)
+    ref = np.asarray(mg_precond_local(mg1, a1, r))
+
+    mesh_p = jax.make_mesh((p,), ("blk",))
+    fn = shard_map(
+        lambda aa, rr: mg_precond_local(mg8, aa, rr, "blk"),
+        mesh=mesh_p, in_specs=(mg_specs(mg8, "blk"), P("blk")),
+        out_specs=P("blk"), check_vma=False)
+    a8_dev = jax.tree.map(
+        lambda a, s: jax.device_put(a, NamedSharding(mesh_p, s)),
+        a8, mg_specs(mg8, "blk"))
+    r_dev = jax.device_put(r, NamedSharding(mesh_p, P("blk")))
+    out = np.asarray(jax.jit(fn)(a8_dev, r_dev))
+    err = np.linalg.norm(out - ref) / np.linalg.norm(ref)
+    assert err < 1e-6, err
+    print("OK mg_gathered", err)
+
+
+def fractional_checks():
+    """End-to-end distributed fractional solve (paper §6.4) at p in
+    {2, 8}: one shard_map program, same iterations as single-device,
+    matches the dense direct solve."""
+    from repro.apps.fractional import (dense_reference_solution, solve,
+                                       solve_distributed)
+    from repro.solvers import TRACE_COUNTS
+
+    ref = solve(16, h2_tol=1e-7, tol=1e-10)
+    u_dense = dense_reference_solution(16)
+    for p in (2, 8):
+        mesh_p = jax.make_mesh((p,), ("blk",))
+        res = solve_distributed(16, mesh_p, h2_tol=1e-7, tol=1e-10)
+        assert res["converged"]
+        assert res["iters"] == ref["iters"], (p, res["iters"], ref["iters"])
+        du = np.linalg.norm(res["u"] - ref["u"]) / np.linalg.norm(ref["u"])
+        dd = (np.linalg.norm(res["u"] - u_dense)
+              / np.linalg.norm(u_dense))
+        assert du < 1e-5, (p, du)
+        assert dd < 2e-2, (p, dd)
+        base = TRACE_COUNTS["dist_fractional"]
+        res["parts"]["fn"](*res["placed_args"], res["b"])
+        assert TRACE_COUNTS["dist_fractional"] == base
+        if p == 8:
+            _assert_callback_free(res["parts"]["fn"], *res["placed_args"],
+                                  res["b"])
+            print("OK frac_dist_jaxpr_callback_free")
+        print(f"OK frac_dist_p{p}", res["iters"], du, dd)
 
 
 if __name__ == "__main__":

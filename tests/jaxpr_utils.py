@@ -1,0 +1,30 @@
+"""Shared jaxpr-walking helpers for the single-program solver tests
+(used by test_solvers.py, test_compress_fused.py-style checks, and the
+multi-device dist_worker.py)."""
+
+
+def walk_primitives(jaxpr, acc):
+    """Collect every primitive name, recursing through nested jaxprs:
+    ClosedJaxpr params carry ``.jaxpr``; shard_map bodies are plain Jaxpr
+    objects (they have ``.eqns`` directly)."""
+    for eq in jaxpr.eqns:
+        acc.append(eq.primitive.name)
+        for v in eq.params.values():
+            vals = v if isinstance(v, (tuple, list)) else (v,)
+            for x in vals:
+                inner = getattr(x, "jaxpr", None)
+                if inner is None and hasattr(x, "eqns"):
+                    inner = x
+                if inner is not None:
+                    walk_primitives(inner, acc)
+    return acc
+
+
+def assert_callback_free(fn, *args, expect_while: bool = True):
+    """The traced program must be one closed device program: a while_loop
+    somewhere (the Krylov iteration) and no host callbacks anywhere."""
+    import jax
+    prims = walk_primitives(jax.make_jaxpr(fn)(*args).jaxpr, [])
+    if expect_while:
+        assert any(p == "while" for p in prims), set(prims)
+    assert not any("callback" in p for p in prims), set(prims)

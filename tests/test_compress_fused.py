@@ -96,16 +96,7 @@ class TestSingleSweepTol:
             np.testing.assert_allclose(ga, gf, atol=1e-4 * scale)
 
 
-def _walk_primitives(jaxpr, acc):
-    for eq in jaxpr.eqns:
-        acc.append(eq.primitive.name)
-        for v in eq.params.values():
-            vals = v if isinstance(v, (tuple, list)) else (v,)
-            for x in vals:
-                inner = getattr(x, "jaxpr", None)
-                if inner is not None:
-                    _walk_primitives(inner, acc)
-    return acc
+from jaxpr_utils import walk_primitives as _walk_primitives  # noqa: E402
 
 
 class TestFixedRankSingleDispatch:

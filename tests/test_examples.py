@@ -1,0 +1,53 @@
+"""Example entry points as CI smoke tests (small-N parametrization) so
+the documented quickstart / serving paths cannot silently rot.
+
+The example modules live outside the installed package; they are loaded
+by file path and their ``main()`` is run at a reduced problem size.
+"""
+import importlib.util
+import os
+import sys
+
+import numpy as np
+import pytest
+
+EXAMPLES_DIR = os.path.abspath(
+    os.path.join(os.path.dirname(__file__), "..", "examples"))
+
+
+def load_example(name):
+    spec = importlib.util.spec_from_file_location(
+        f"examples_{name}", os.path.join(EXAMPLES_DIR, f"{name}.py"))
+    mod = importlib.util.module_from_spec(spec)
+    sys.modules[spec.name] = mod
+    spec.loader.exec_module(mod)
+    return mod
+
+
+@pytest.mark.slow
+class TestQuickstart:
+    @pytest.mark.parametrize("side,leaf", [(16, 16), (32, 16)])
+    def test_runs_and_stays_accurate(self, side, leaf):
+        mod = load_example("quickstart")
+        err, err2, ratio = mod.main(side=side, leaf_size=leaf)
+        # small-N parametrization has relatively coarser admissible blocks
+        # than the documented side=64 run, so the bounds are looser
+        assert err < 5e-3, err           # Chebyshev construction accuracy
+        assert err2 < 2e-2, err2         # tau=1e-3 recompression accuracy
+        assert ratio > 1.0, ratio        # recompression actually shrinks
+
+
+@pytest.mark.slow
+class TestServeSolver:
+    def test_serving_loop_converges(self):
+        mod = load_example("serve_h2_solver")
+        r1, r2, rb = mod.main(side=16, leaf_size=16, tol=1e-5)
+        assert bool(r1.converged) and bool(r2.converged)
+        assert bool(rb.converged)
+        # recompression must not change the served solution materially
+        drift = float(np.linalg.norm(np.asarray(r1.x) - np.asarray(r2.x))
+                      / np.linalg.norm(np.asarray(r1.x)))
+        assert drift < 1e-2, drift
+        # block solve served every RHS
+        assert np.asarray(rb.iters).shape == (8,)
+        assert float(np.max(np.asarray(rb.relres))) <= 1e-5 * 1.01

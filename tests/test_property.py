@@ -7,6 +7,8 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
+pytestmark = pytest.mark.slow       # property tier: CI slow job
+
 from repro.core.clustering import build_cluster_tree
 from repro.core.admissibility import build_block_structure
 from repro.core.construction import construct_h2, dense_reference
