@@ -22,9 +22,10 @@ wall time — the comm model rows (`matvec_comm_bytes`, also emitted by
 
 Device count must be fixed before jax initializes, so the measurement runs
 in a subprocess (`--worker`); `run()` forks it and forwards the records —
-the same pattern as `tests/test_dist.py`.  Timing methodology: the modes
-are timed in interleaved rounds and the speedups are **medians of
-per-round ratios** — the host's throughput drifts on multi-second scales
+the same pattern as `tests/test_dist.py`.  Timing methodology
+(`repro.obs.timers`): the modes are timed in interleaved rounds and the
+speedups are **medians of per-round ratios** — the host's throughput
+drifts on multi-second scales
 (shared machine), but within one round (~100 ms) all modes see the same
 machine state, so the ratio estimator cancels the drift that would poison
 independent means.
@@ -47,8 +48,6 @@ def _worker(quick: bool) -> None:
     os.environ["XLA_FLAGS"] = (
         "--xla_force_host_platform_device_count=8 "
         + os.environ.get("XLA_FLAGS", ""))
-    import time
-
     import jax
     import jax.numpy as jnp
     import numpy as np
@@ -59,6 +58,7 @@ def _worker(quick: bool) -> None:
                                  matvec_comm_bytes, partition_h2)
     from repro.core.kernels_fn import exponential_kernel
     from repro.core.matvec import h2_matvec
+    from repro.obs.timers import interleaved_times, median_ratio
 
     p, nv = 8, 16
     mesh = jax.make_mesh((p,), ("blk",))
@@ -85,13 +85,9 @@ def _worker(quick: bool) -> None:
             y = np.asarray(mv(dd, x))
             err = np.linalg.norm(y - y_ref) / np.linalg.norm(y_ref)
             assert err < 1e-5, (comm, err)
-        acc: Dict[str, List[float]] = {c: [] for c in mvs}
-        reps = 12 if quick else 24
-        for _ in range(reps):
-            for comm, mv in mvs.items():
-                t0 = time.perf_counter()
-                jax.block_until_ready(mv(dd, x))
-                acc[comm].append(time.perf_counter() - t0)
+        acc = interleaved_times(
+            {comm: (lambda mv=mv: mv(dd, x)) for comm, mv in mvs.items()},
+            reps=12 if quick else 24, warmup=0)   # parity gate warmed up
         for comm, ts in acc.items():
             records.append({
                 "name": f"dist_mv_N{shape.n}_{comm}",
@@ -103,12 +99,10 @@ def _worker(quick: bool) -> None:
         records.append({
             "name": f"dist_speedup_N{shape.n}",
             "N": shape.n, "nv": nv, "p": p,
-            "halo_plan_vs_allgather": round(float(np.median(
-                [a / h for a, h in zip(acc["allgather"],
-                                       acc["halo-plan"])])), 2),
-            "halo_plan_vs_ppermute": round(float(np.median(
-                [a / h for a, h in zip(acc["ppermute"],
-                                       acc["halo-plan"])])), 2),
+            "halo_plan_vs_allgather": round(
+                median_ratio(acc["allgather"], acc["halo-plan"]), 2),
+            "halo_plan_vs_ppermute": round(
+                median_ratio(acc["ppermute"], acc["halo-plan"]), 2),
         })
     print(MARKER + json.dumps(records))
 

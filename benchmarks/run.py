@@ -2,6 +2,7 @@
 
     PYTHONPATH=src python -m benchmarks.run [--only hgemv,compression_bench]
                                             [--quick] [--json-dir DIR]
+                                            [--baseline BENCH.json]
 
 Prints ``name,us_per_call,derived`` CSV rows.  Modules whose ``run``
 accepts a second argument also emit machine-readable records, written as
@@ -9,6 +10,12 @@ accepts a second argument also emit machine-readable records, written as
 nv, backend) — the perf trajectory consumed by CI and future PRs.  The
 roofline table (dry-run derived, 256/512-device) is produced separately by
 ``benchmarks/roofline.py`` from ``dryrun_results.json``.
+
+``--baseline`` loads a previous run's BENCH json (any of the emitted
+files, or a ``repro.obs.profile_solve`` document) and prints non-fatal
+``# WARN`` rows for records whose timing keys regressed by more than 20%
+vs the record of the same name — a shared-CI-runner-tolerant tripwire,
+not a gate.
 """
 from __future__ import annotations
 
@@ -23,6 +30,56 @@ from typing import Dict, List
 MODULES = ["accuracy", "hgemv", "compression_bench", "construction_bench",
            "dist_bench", "solver_bench", "fractional", "lm_step"]
 
+#: per-record wall-time keys compared by ``compare_to_baseline``
+TIMING_KEYS = ("us", "us_per_solve", "us_per_iter")
+
+
+def _record_key(r: Dict):
+    return r.get("name") or (r.get("phase"), r.get("comm"))
+
+
+def load_baseline(path: str) -> List[Dict]:
+    """Load a baseline record list from a BENCH json — either a plain
+    record list (``benchmarks.run`` output) or a ``profile_solve``
+    document (its ``phases`` records are compared by (phase, comm))."""
+    with open(path) as f:
+        doc = json.load(f)
+    if isinstance(doc, dict):
+        doc = doc.get("phases", [])
+    return [r for r in doc if isinstance(r, dict)]
+
+
+def compare_to_baseline(records: List[Dict], baseline: List[Dict],
+                        threshold: float = 0.2) -> List[str]:
+    """Non-fatal regression check: ``# WARN`` line per timing key (and
+    per phase of a ``phases`` breakdown) that exceeds the baseline by
+    more than ``threshold`` (relative).  Unknown names are skipped."""
+    base = {_record_key(b): b for b in baseline}
+    warns: List[str] = []
+    for r in records:
+        b = base.get(_record_key(r))
+        if b is None:
+            continue
+        for k in TIMING_KEYS:
+            cur, ref = r.get(k), b.get(k)
+            if isinstance(cur, (int, float)) and \
+                    isinstance(ref, (int, float)) and ref > 0 \
+                    and cur / ref > 1.0 + threshold:
+                warns.append(
+                    f"# WARN {_record_key(r)} {k}: {cur:.1f} vs baseline "
+                    f"{ref:.1f} ({cur / ref:.2f}x)")
+        cur_ph, ref_ph = r.get("phases"), b.get("phases")
+        if isinstance(cur_ph, dict) and isinstance(ref_ph, dict):
+            for ph, cur in cur_ph.items():
+                ref = ref_ph.get(ph)
+                if isinstance(cur, (int, float)) and \
+                        isinstance(ref, (int, float)) and ref > 0 \
+                        and cur / ref > 1.0 + threshold:
+                    warns.append(
+                        f"# WARN {_record_key(r)} phase {ph}: {cur:.1f} vs "
+                        f"baseline {ref:.1f} ({cur / ref:.2f}x)")
+    return warns
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
@@ -32,12 +89,17 @@ def main() -> None:
                     help="smoke configuration (sets REPRO_BENCH_QUICK=1)")
     ap.add_argument("--json-dir", default=".",
                     help="directory for BENCH_<module>.json files")
+    ap.add_argument("--baseline", default=None, metavar="BENCH.json",
+                    help="previous-run records to diff against; >20%% "
+                         "per-key regressions print non-fatal # WARN rows")
     args, _ = ap.parse_known_args()
     if args.quick:
         os.environ["REPRO_BENCH_QUICK"] = "1"
     mods = args.only.split(",") if args.only else MODULES
+    baseline = load_baseline(args.baseline) if args.baseline else None
 
     rows: List[str] = []
+    all_records: List[Dict] = []
     print("name,us_per_call,derived")
     failed = []
     for name in mods:
@@ -52,6 +114,7 @@ def main() -> None:
             for r in rows[before:]:
                 print(r, flush=True)
             if records:
+                all_records += records
                 stem = name[:-len("_bench")] if name.endswith("_bench") \
                     else name
                 os.makedirs(args.json_dir, exist_ok=True)
@@ -62,6 +125,12 @@ def main() -> None:
         except Exception:
             failed.append(name)
             traceback.print_exc()
+    if baseline is not None:
+        warns = compare_to_baseline(all_records, baseline)
+        for w in warns:
+            print(w, flush=True)
+        if not warns:
+            print("# baseline check: no >20% regressions", flush=True)
     if failed:
         print(f"FAILED modules: {failed}", file=sys.stderr)
         sys.exit(1)

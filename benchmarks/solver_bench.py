@@ -9,11 +9,15 @@ two problem sizes per tier.  Reported per record: iterations to tolerance,
 wall time per solve and per iteration, and the modeled per-device
 collective bytes per iteration (`dist_solve_comm_bytes`).
 
-Methodology matches `benchmarks/dist_bench.py`: the comm modes are timed
-in interleaved rounds and the speedup row is the **median of per-round
-ratios**, which cancels the shared host's throughput drift.  Device count
-must be fixed before jax initializes, so the measurement runs in a
-subprocess (`--worker`).
+Methodology matches `benchmarks/dist_bench.py` and routes through
+`repro.obs.timers`: the comm modes are timed in interleaved rounds and the
+speedup row is the **median of per-round ratios**, which cancels the
+shared host's throughput drift.  Each record additionally carries a
+``phases`` dict — the dispatch-corrected per-phase µs of one Krylov
+iteration from the segmented replay (`repro.obs.profile_solve`), so the
+whole-solve regression this benchmark reports is localized in the same
+JSON that reports it.  Device count must be fixed before jax initializes,
+so the measurement runs in a subprocess (`--worker`).
 
 Set ``REPRO_BENCH_QUICK=1`` (or ``benchmarks.run --quick``) for the CI
 smoke tier (n in {16, 32}; the full tier runs n in {32, 64}).
@@ -33,8 +37,6 @@ def _worker(quick: bool) -> None:
     os.environ["XLA_FLAGS"] = (
         "--xla_force_host_platform_device_count=8 "
         + os.environ.get("XLA_FLAGS", ""))
-    import time
-
     import jax
     import jax.numpy as jnp
     import numpy as np
@@ -43,6 +45,8 @@ def _worker(quick: bool) -> None:
     from repro.apps.fractional import (FractionalProblem,
                                        dist_solve_comm_bytes,
                                        make_dist_solve)
+    from repro.obs.profile_solve import profile_stages
+    from repro.obs.timers import interleaved_times, median_ratio
 
     p = 8
     mesh = jax.make_mesh((p,), ("blk",))
@@ -68,17 +72,15 @@ def _worker(quick: bool) -> None:
         # or two (see tests/dist_worker.py solver parity slack)
         assert abs(it0["halo-plan"] - it0["allgather"]) <= 2, it0
 
-        acc: Dict[str, List[float]] = {c: [] for c in comms}
-        reps = 6 if quick else 10
-        for _ in range(reps):
-            for comm in comms:
-                parts, args, _, _ = solvers[comm]
-                t0 = time.perf_counter()
-                jax.block_until_ready(parts["fn"](*args, b_dev))
-                acc[comm].append(time.perf_counter() - t0)
+        acc = interleaved_times(
+            {comm: (lambda comm=comm: solvers[comm][0]["fn"](
+                *solvers[comm][1], b_dev)) for comm in comms},
+            reps=6 if quick else 10, warmup=0)  # parity gate warmed up
         for comm in comms:
             parts, _, iters, relres = solvers[comm]
             us = float(np.median(acc[comm])) * 1e6
+            _, _, corrected, _ = profile_stages(
+                parts, mesh, b, comm, reps=4 if quick else 6)
             records.append({
                 "name": f"frac_solve_n{n}_{comm}",
                 "n": n, "N": n * n, "p": p, "comm": comm,
@@ -87,13 +89,14 @@ def _worker(quick: bool) -> None:
                 "us_per_iter": round(us / max(iters, 1), 1),
                 "model_bytes_per_iter": dist_solve_comm_bytes(
                     parts["dshape"], parts["mg"], comm),
+                "phases": {ph: round(sec * 1e6, 1)
+                           for ph, sec in corrected.items()},
             })
         records.append({
             "name": f"frac_solve_speedup_n{n}",
             "n": n, "N": n * n, "p": p, "iters": it0["halo-plan"],
-            "halo_plan_vs_allgather": round(float(np.median(
-                [a / h for a, h in zip(acc["allgather"],
-                                       acc["halo-plan"])])), 2),
+            "halo_plan_vs_allgather": round(
+                median_ratio(acc["allgather"], acc["halo-plan"]), 2),
         })
     print(MARKER + json.dumps(records))
 

@@ -6,3 +6,14 @@ substrate.  See README.md / DESIGN.md.
 """
 
 __version__ = "1.0.0"
+
+# entry points of the observability/cost layers, resolved lazily so bare
+# ``import repro`` stays free of jax/numpy imports
+_LAZY_SUBPACKAGES = ("obs", "perf")
+
+
+def __getattr__(name):
+    if name in _LAZY_SUBPACKAGES:
+        import importlib
+        return importlib.import_module(f"repro.{name}")
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")

@@ -43,6 +43,7 @@ from repro.core.kernels_fn import (diffusivity_2d, fractional_kernel_2d,
                                    fractional_kernel_2d_positive)
 from repro.core.matvec import h2_matvec
 from repro.core.structure import H2Data, H2Shape
+from repro.obs.trace import phase
 from repro.solvers import (TRACE_COUNTS, build_grid_mg, mg_halo_bytes,
                            mg_precond_local, mg_specs, result_specs)
 from repro.solvers import gmres as _gmres
@@ -283,15 +284,19 @@ def _dist_apply_a(dshape: DistH2Shape, d: DistH2Data, aux: Dict, mg,
     (``mg._apply_op``: ppermute row halo, precomputed faces).
     """
     p = dshape.p
-    xf = jax.lax.all_gather(x, axis, axis=0, tiled=True) if p > 1 else x
-    xt = jnp.take(xf, aux["perm"], axis=0)[:, None]
+    with phase("solve/transpose-in"):
+        xf = jax.lax.all_gather(x, axis, axis=0, tiled=True) if p > 1 \
+            else x
+        xt = jnp.take(xf, aux["perm"], axis=0)[:, None]
     ku_t = dist_h2_matvec_local(dshape, d, xt, axis, comm)[:, 0]
-    kf = jax.lax.all_gather(ku_t, axis, axis=0, tiled=True) if p > 1 \
-        else ku_t
-    ku = jnp.take(kf, aux["unperm"], axis=0)
-    u = x.reshape(n // p if p > 1 else n, n)
-    local = _mg_apply_op(mg, mga, 0, u, axis).reshape(x.shape)
-    return (h * h) * (ku + local)
+    with phase("solve/transpose-out"):
+        kf = jax.lax.all_gather(ku_t, axis, axis=0, tiled=True) if p > 1 \
+            else ku_t
+        ku = jnp.take(kf, aux["unperm"], axis=0)
+    with phase("solve/stencil"):
+        u = x.reshape(n // p if p > 1 else n, n)
+        local = _mg_apply_op(mg, mga, 0, u, axis).reshape(x.shape)
+        return (h * h) * (ku + local)
 
 
 def make_dist_solve(prob: Dict, mesh: Mesh, axis="blk",

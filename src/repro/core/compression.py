@@ -46,6 +46,8 @@ from typing import List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.obs.trace import phase
+
 from .structure import H2Data, H2Shape, remarshal, shape_of, \
     stack_blocks_by_plan
 
@@ -134,11 +136,12 @@ def compression_weights(shape: H2Shape, data: H2Data, backend: str = "jnp",
                              jnp.sort(data.s_cols[l]), shape.nodes(l),
                              shape.col_maxb[l])
 
-    ru = sweep(data.e, stacked_row, shape.row_maxb)
-    if aliased and shape.symmetric:
-        return ru, ru
-    rv = sweep(data.f, stacked_col, shape.col_maxb)
-    return ru, rv
+    with phase("compress/weights"):
+        ru = sweep(data.e, stacked_row, shape.row_maxb)
+        if aliased and shape.symmetric:
+            return ru, ru
+        rv = sweep(data.f, stacked_col, shape.col_maxb)
+        return ru, rv
 
 
 # ---------------------------------------------------------------------------
@@ -177,14 +180,15 @@ def _project_couplings(shape: H2Shape, data: H2Data, pu: List[jax.Array],
                        pv: List[jax.Array], dtype) -> List[jax.Array]:
     """Coupling projection ``S' = P_row S P_col^T`` (batched GEMM)."""
     s_new = []
-    for l in range(shape.depth + 1):
-        if shape.coupling_counts[l] == 0:
-            s_new.append(jnp.zeros((0, pu[l].shape[1], pv[l].shape[1]),
-                                   dtype))
-            continue
-        pl = jnp.take(pu[l], data.s_rows[l], axis=0)      # [nb, r, k]
-        pr = jnp.take(pv[l], data.s_cols[l], axis=0)
-        s_new.append(jnp.einsum("brk,bkj,bsj->brs", pl, data.s[l], pr))
+    with phase("compress/project-s"):
+        for l in range(shape.depth + 1):
+            if shape.coupling_counts[l] == 0:
+                s_new.append(jnp.zeros((0, pu[l].shape[1], pv[l].shape[1]),
+                                       dtype))
+                continue
+            pl = jnp.take(pu[l], data.s_rows[l], axis=0)  # [nb, r, k]
+            pr = jnp.take(pv[l], data.s_cols[l], axis=0)
+            s_new.append(jnp.einsum("brk,bkj,bsj->brs", pl, data.s[l], pr))
     return s_new
 
 
@@ -241,11 +245,12 @@ def truncate(shape: H2Shape, data: H2Data, ru: List[jax.Array],
             p[l - 1] = truncation_project(gk, stack)
         return new_leaf, new_t, p
 
-    u_leaf, e_new, pu = sweep(data.u_leaf, data.e, ru)
-    if shape.symmetric and data.v_leaf is data.u_leaf:
-        v_leaf, f_new, pv = u_leaf, e_new, pu
-    else:
-        v_leaf, f_new, pv = sweep(data.v_leaf, data.f, rv)
+    with phase("compress/truncate"):
+        u_leaf, e_new, pu = sweep(data.u_leaf, data.e, ru)
+        if shape.symmetric and data.v_leaf is data.u_leaf:
+            v_leaf, f_new, pv = u_leaf, e_new, pu
+        else:
+            v_leaf, f_new, pv = sweep(data.v_leaf, data.f, rv)
     return _pack_truncated(shape, data, u_leaf, v_leaf, e_new, f_new, pu, pv)
 
 

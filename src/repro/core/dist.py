@@ -41,6 +41,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
+from repro.obs.trace import phase
 
 from . import halo as _halo
 from .halo import HaloPlan, partition_level
@@ -326,33 +327,41 @@ def _halo_exchange(x: jax.Array, axis, rad: int, p: int) -> jax.Array:
 def _local_upsweep(dshape: DistH2Shape, d: DistH2Data, x_leaves, axis):
     """Branch upsweep -> xhat dict for levels lc..depth, then replicated top."""
     depth, lc = dshape.depth, dshape.lc
-    xhat: Dict[int, jax.Array] = {}
-    xhat[depth] = jnp.einsum("bmk,bmv->bkv", d.v_leaf, x_leaves)
-    for l in range(depth, lc, -1):
-        f = d.f_br[l - lc]
-        contrib = jnp.einsum("ckp,ckv->cpv", f, xhat[l])
-        nn = contrib.shape[0]
-        xhat[l - 1] = contrib.reshape(nn // 2, 2, *contrib.shape[1:]).sum(1)
-    # gather branch roots -> replicated level-lc vector tree
-    root = xhat[lc]                              # [1, k, nv]
-    gathered = jax.lax.all_gather(root, axis, tiled=True)   # [2**lc, k, nv]
-    xhat_top: Dict[int, jax.Array] = {lc: gathered}
-    for l in range(lc, 0, -1):
-        f = d.f_top[l]
-        contrib = jnp.einsum("ckp,ckv->cpv", f, xhat_top[l])
-        nn = contrib.shape[0]
-        xhat_top[l - 1] = contrib.reshape(nn // 2, 2, *contrib.shape[1:]).sum(1)
+    with phase("hgemv/upsweep"):
+        xhat: Dict[int, jax.Array] = {}
+        xhat[depth] = jnp.einsum("bmk,bmv->bkv", d.v_leaf, x_leaves)
+        for l in range(depth, lc, -1):
+            f = d.f_br[l - lc]
+            contrib = jnp.einsum("ckp,ckv->cpv", f, xhat[l])
+            nn = contrib.shape[0]
+            xhat[l - 1] = contrib.reshape(nn // 2, 2,
+                                          *contrib.shape[1:]).sum(1)
+        # gather branch roots -> replicated level-lc vector tree
+        root = xhat[lc]                          # [1, k, nv]
+        with phase("hgemv/root-gather"):
+            gathered = jax.lax.all_gather(root, axis, tiled=True)
+        xhat_top: Dict[int, jax.Array] = {lc: gathered}  # [2**lc, k, nv]
+        for l in range(lc, 0, -1):
+            f = d.f_top[l]
+            contrib = jnp.einsum("ckp,ckv->cpv", f, xhat_top[l])
+            nn = contrib.shape[0]
+            xhat_top[l - 1] = contrib.reshape(nn // 2, 2,
+                                              *contrib.shape[1:]).sum(1)
     return xhat, xhat_top
 
 
 def _coupling_phase(dshape: DistH2Shape, d: DistH2Data, xhat, xhat_top,
-                    axis, comm: str):
+                    axis, comm: str, gathered: Optional[Dict] = None):
     """yhat at branch levels (local) + top levels (replicated).
 
     Single dispatch per level (DESIGN.md §3.5): the halo/allgather sources
     are gathered by the per-device slot plan into ``[nloc, maxb*k, nv]``
     and contracted against the row-marshaled blocks in one batched GEMM —
     the slot reduction rides the contraction, no scatter inside shard_map.
+
+    ``gathered`` (allgather mode only) optionally supplies the already
+    all_gather'ed full levels ``{l: [2**l, k, nv]}`` so the exchange can be
+    cut into its own stage program (obs segmented replay).
     """
     depth, lc, p = dshape.depth, dshape.lc, dshape.p
     nv = xhat[depth].shape[-1]
@@ -372,7 +381,9 @@ def _coupling_phase(dshape: DistH2Shape, d: DistH2Data, xhat, xhat_top,
         cols = d.pb_col[i]                    # [nloc*maxb] global col plan
         own_start = me * nloc
         if comm == "allgather" and p > 1:
-            xg_full = jax.lax.all_gather(xhat[l], axis, tiled=True)
+            with phase("hgemv/exchange"):
+                xg_full = gathered[l] if gathered is not None else \
+                    jax.lax.all_gather(xhat[l], axis, tiled=True)
             xg = jnp.take(xg_full, cols, axis=0)
         else:
             rad = dshape.br_radius[i] if p > 1 else 0
@@ -384,13 +395,16 @@ def _coupling_phase(dshape: DistH2Shape, d: DistH2Data, xhat, xhat_top,
                 # (which would send f32 and round afterwards).
                 src = jax.lax.optimization_barrier(
                     src.astype(jnp.bfloat16))
-            halo = _halo_exchange(src, axis, rad, p)
+            with phase("hgemv/exchange"):
+                halo = _halo_exchange(src, axis, rad, p)
             idx = cols - own_start + rad * nloc
             xg = jnp.take(halo, idx, axis=0).astype(xhat[l].dtype)
-        yhat[l] = jnp.einsum("nkj,njv->nkv", s_mar,
-                             xg.reshape(nloc, maxb * k, nv))
+        with phase("hgemv/coupling-gemm"):
+            yhat[l] = jnp.einsum("nkj,njv->nkv", s_mar,
+                                 xg.reshape(nloc, maxb * k, nv))
 
-    _top_coupling(dshape, d, xhat_top, yhat_top, nv)
+    with phase("hgemv/coupling-gemm"):
+        _top_coupling(dshape, d, xhat_top, yhat_top, nv)
     return yhat, yhat_top
 
 
@@ -430,59 +444,76 @@ def _use_split(schedule: str, nloc: int, maxb: int, maxb_d: int,
     return nloc * maxb_d + n_bnd * maxb_o < nloc * maxb
 
 
-def _coupling_phase_overlap(dshape: DistH2Shape, d: DistH2Data, xhat,
-                            xhat_top, x_leaves, axis, comm: str,
-                            backend: str = "jnp", schedule: str = "auto"):
-    """Compressed-halo coupling + dense phases on the §4.2 overlap schedule.
+def _hp_payload_layout(dshape: DistH2Shape, nv: int):
+    """Host-static layout of the fused per-offset halo payloads.
 
-    Program order (= XLA scheduling opportunity): (A) gather every level's
-    planned send rows (branch levels AND dense leaves), flatten and fuse
-    them per neighbor offset, and issue the packed exchange for the whole
-    matvec up front — one ``ppermute`` round-trip per neighbor distance;
-    (B) compute every diagonal (own-column) GEMM, the dense diagonal
-    block, and the replicated top levels while the permutes are in
-    flight (level ``lc`` sources from the C-level branch-root gather and
-    never exchanges); (C) slice the landed fused buffers back into
-    per-level halos and finish the off-diagonal GEMMs (or, for levels the
-    static policy left fused, the whole level's combined GEMM).  Returns
-    ``(yhat, yhat_top, y_dense)``.
+    Mirrors EXACTLY the pack order of ``_hp_pack_exchange`` (branch levels
+    ``lc+1..depth`` ascending, then the dense leaves): ``seg[(key, delta)]
+    = (lo, sz)`` is level ``key``'s flat slice inside offset ``delta``'s
+    fused payload (element counts — dtype-independent) and ``tot[delta]``
+    the payload's total length.  The dense key is ``depth + 1``.  Shared
+    by the matvec and the obs profiler's stage cut, so the landed-buffer
+    slicing cannot drift from the pack order.
+    """
+    depth, lc = dshape.depth, dshape.lc
+    seg: Dict[Tuple[int, int], Tuple[int, int]] = {}
+    tot: Dict[int, int] = {}
+
+    def add(key, offsets, caps, width):
+        for delta, cap in zip(offsets, caps):
+            sz = cap * width * nv
+            seg[(key, delta)] = (tot.get(delta, 0), sz)
+            tot[delta] = tot.get(delta, 0) + sz
+
+    if dshape.p > 1:
+        for l in range(lc + 1, depth + 1):
+            i = l - lc
+            if dshape.ranks[l] == 0 or not dshape.br_offsets[i]:
+                continue
+            add(l, dshape.br_offsets[i], dshape.br_caps[i], dshape.ranks[l])
+        add(depth + 1, dshape.dense_offsets, dshape.dense_caps,
+            dshape.leaf_size)
+    return seg, tot
+
+
+def _hp_pack_exchange(dshape: DistH2Shape, d: DistH2Data, xhat, x_leaves,
+                      axis, comm: str, backend: str = "jnp"
+                      ) -> Dict[int, jax.Array]:
+    """Phase A of the §4.2 overlap schedule: gather every level's planned
+    send rows (branch levels AND dense leaves), flatten and fuse them per
+    neighbor offset, and issue one packed ``ppermute`` per offset — the
+    whole matvec's exchange up front.  Returns the landed flat payloads
+    ``chunks[delta]``, laid out per ``_hp_payload_layout``.  Factored out
+    of ``_coupling_phase_overlap`` so the obs profiler can cut the matvec
+    at the pack/exchange boundary.
+
+    Level ``lc`` never exchanges: the C-level branch-root gather that
+    feeds the replicated top sweep already delivered every device's
+    ``xhat[lc]``, so its coupling sources from that replica for free.
     """
     depth, lc, p = dshape.depth, dshape.lc, dshape.p
-    m = dshape.leaf_size
-    nl = dshape.leaves_per_dev
-    nv = xhat[depth].shape[-1]
     bf16 = comm.endswith("-bf16")
-    DENSE = depth + 1                          # key for the dense payload
-
-    # --- phase A: pack + fuse payloads per offset, one ppermute each
     parts: Dict[int, List[jax.Array]] = {}     # offset -> flat payloads
-    seg: Dict[Tuple[int, int], Tuple[int, int]] = {}  # (key, off) -> (lo, sz)
 
-    def _pack(src, key, plan: HaloPlan, offsets):
+    def _pack(src, plan: HaloPlan, offsets):
         for delta, idx in zip(offsets, plan.send):
-            if backend == "pallas":
-                from repro.kernels import ops as kops
-                packed = kops.halo_pack(src, idx)
-            else:
-                packed = jnp.take(src, idx, axis=0)
-            if bf16:
-                packed = packed.astype(jnp.bfloat16)
-            flat = packed.reshape(-1)
-            lst = parts.setdefault(delta, [])
-            seg[(key, delta)] = (sum(int(q.shape[0]) for q in lst),
-                                 int(flat.shape[0]))
-            lst.append(flat)
+            with phase("halo/pack"):
+                if backend == "pallas":
+                    from repro.kernels import ops as kops
+                    packed = kops.halo_pack(src, idx)
+                else:
+                    packed = jnp.take(src, idx, axis=0)
+                if bf16:
+                    packed = packed.astype(jnp.bfloat16)
+                parts.setdefault(delta, []).append(packed.reshape(-1))
 
-    # level lc never exchanges: the C-level branch-root gather that feeds
-    # the replicated top sweep already delivered every device's xhat[lc]
-    # (xhat_top[lc]), so its coupling sources from that replica for free
     if p > 1:
         for l in range(lc + 1, depth + 1):
             i = l - lc
             if dshape.ranks[l] == 0 or not dshape.br_offsets[i]:
                 continue
-            _pack(xhat[l], l, d.hp_br[i], dshape.br_offsets[i])
-        _pack(x_leaves, DENSE, d.hp_dense, dshape.dense_offsets)
+            _pack(xhat[l], d.hp_br[i], dshape.br_offsets[i])
+        _pack(x_leaves, d.hp_dense, dshape.dense_offsets)
     chunks: Dict[int, jax.Array] = {}
     for delta, lst in parts.items():
         payload = jnp.concatenate(lst) if len(lst) > 1 else lst[0]
@@ -491,16 +522,54 @@ def _coupling_phase_overlap(dshape: DistH2Shape, d: DistH2Data, xhat,
             # would ship f32 and round afterwards)
             payload = jax.lax.optimization_barrier(payload)
         perm = [(src, (src - delta) % p) for src in range(p)]
-        chunks[delta] = jax.lax.ppermute(payload, axis, perm)
+        with phase("halo/round"):
+            chunks[delta] = jax.lax.ppermute(payload, axis, perm)
+    return chunks
+
+
+def _coupling_phase_overlap(dshape: DistH2Shape, d: DistH2Data, xhat,
+                            xhat_top, x_leaves, axis, comm: str,
+                            backend: str = "jnp", schedule: str = "auto",
+                            chunks: Optional[Dict[int, jax.Array]] = None):
+    """Compressed-halo coupling + dense phases on the §4.2 overlap schedule.
+
+    Program order (= XLA scheduling opportunity): (A) the fused packed
+    exchange (``_hp_pack_exchange``) for the whole matvec up front — one
+    ``ppermute`` round-trip per neighbor distance; (B) compute every
+    diagonal (own-column) GEMM, the dense diagonal block, and the
+    replicated top levels while the permutes are in flight (level ``lc``
+    sources from the C-level branch-root gather and never exchanges);
+    (C) slice the landed fused buffers back into per-level halos and
+    finish the off-diagonal GEMMs (or, for levels the static policy left
+    fused, the whole level's combined GEMM).  Returns
+    ``(yhat, yhat_top, y_dense)``.
+
+    ``chunks`` optionally supplies already-landed payloads (phase A run
+    separately — the obs profiler's stage cut); they must follow
+    ``_hp_payload_layout``.
+    """
+    depth, lc, p = dshape.depth, dshape.lc, dshape.p
+    m = dshape.leaf_size
+    nl = dshape.leaves_per_dev
+    nv = xhat[depth].shape[-1]
+    DENSE = depth + 1                          # key for the dense payload
+    seg, _ = _hp_payload_layout(dshape, nv)
+
+    # --- phase A: pack + fuse payloads per offset, one ppermute each
+    if chunks is None:
+        with phase("hgemv/exchange"):
+            chunks = _hp_pack_exchange(dshape, d, xhat, x_leaves, axis,
+                                       comm, backend)
 
     def _landed(src, key, offsets, caps, width):
         """[nloc + sum(caps), width-per-row ...] buffer in plan layout."""
-        pieces = [src]
-        for delta, cap in zip(offsets, caps):
-            lo, sz = seg[(key, delta)]
-            pieces.append(chunks[delta][lo:lo + sz]
-                          .reshape(cap, width, nv).astype(src.dtype))
-        return jnp.concatenate(pieces, axis=0)
+        with phase("halo/land"):
+            pieces = [src]
+            for delta, cap in zip(offsets, caps):
+                lo, sz = seg[(key, delta)]
+                pieces.append(chunks[delta][lo:lo + sz]
+                              .reshape(cap, width, nv).astype(src.dtype))
+            return jnp.concatenate(pieces, axis=0)
 
     def _split(i, k):
         nloc_g = d.s_br_mar[i].shape[0]
@@ -519,38 +588,39 @@ def _coupling_phase_overlap(dshape: DistH2Shape, d: DistH2Data, xhat,
     # (fused-schedule levels wait for their halo in phase C instead)
     yhat: Dict[int, jax.Array] = {}
     yhat_top: Dict[int, jax.Array] = {}
-    for l in range(lc, depth + 1):
-        i = l - lc
-        nloc = dshape.nodes_local(l)
-        k = dshape.ranks[l]
-        if k == 0:
-            yhat[l] = jnp.zeros((nloc, k, nv), xhat[depth].dtype)
-            continue
-        if l == lc and p > 1:
-            # sourced from the replicated C-level gather — local compute,
-            # one combined GEMM with the GLOBAL column plan
-            s_mar = d.s_br_mar[i]
-            maxb = s_mar.shape[-1] // k
-            xg = jnp.take(xhat_top[lc], d.pb_col[i], axis=0)
-            yhat[l] = jnp.einsum("nkj,njv->nkv", s_mar,
-                                 xg.reshape(nloc, maxb * k, nv))
-            continue
-        if not _split(i, k):
-            yhat[l] = None
-            continue
-        s_diag = d.s_br_mar_diag[i]            # [nloc, k, maxb_d*k]
-        maxb_d = s_diag.shape[-1] // k
-        xg = jnp.take(xhat[l], d.hp_br[i].diag_col, axis=0)
-        yhat[l] = jnp.einsum("nkj,njv->nkv", s_diag,
-                             xg.reshape(nloc, maxb_d * k, nv))
-    y_de = None
-    if d_split:
-        d_diag = d.dense_mar_diag              # [nl, m, dmaxb_d*m]
-        dmaxb_d = d_diag.shape[-1] // m
-        xg = jnp.take(x_leaves, d.hp_dense.diag_col, axis=0)
-        y_de = jnp.einsum("nkj,njv->nkv", d_diag,
-                          xg.reshape(nl, dmaxb_d * m, nv))
-    _top_coupling(dshape, d, xhat_top, yhat_top, nv)
+    with phase("hgemv/diag-gemm"):
+        for l in range(lc, depth + 1):
+            i = l - lc
+            nloc = dshape.nodes_local(l)
+            k = dshape.ranks[l]
+            if k == 0:
+                yhat[l] = jnp.zeros((nloc, k, nv), xhat[depth].dtype)
+                continue
+            if l == lc and p > 1:
+                # sourced from the replicated C-level gather — local
+                # compute, one combined GEMM with the GLOBAL column plan
+                s_mar = d.s_br_mar[i]
+                maxb = s_mar.shape[-1] // k
+                xg = jnp.take(xhat_top[lc], d.pb_col[i], axis=0)
+                yhat[l] = jnp.einsum("nkj,njv->nkv", s_mar,
+                                     xg.reshape(nloc, maxb * k, nv))
+                continue
+            if not _split(i, k):
+                yhat[l] = None
+                continue
+            s_diag = d.s_br_mar_diag[i]        # [nloc, k, maxb_d*k]
+            maxb_d = s_diag.shape[-1] // k
+            xg = jnp.take(xhat[l], d.hp_br[i].diag_col, axis=0)
+            yhat[l] = jnp.einsum("nkj,njv->nkv", s_diag,
+                                 xg.reshape(nloc, maxb_d * k, nv))
+        y_de = None
+        if d_split:
+            d_diag = d.dense_mar_diag          # [nl, m, dmaxb_d*m]
+            dmaxb_d = d_diag.shape[-1] // m
+            xg = jnp.take(x_leaves, d.hp_dense.diag_col, axis=0)
+            y_de = jnp.einsum("nkj,njv->nkv", d_diag,
+                              xg.reshape(nl, dmaxb_d * m, nv))
+        _top_coupling(dshape, d, xhat_top, yhat_top, nv)
 
     # --- phase C: finish from the landed buffers.  Split levels add the
     # off-diagonal correction: the off twin is row-compressed over the
@@ -579,55 +649,61 @@ def _coupling_phase_overlap(dshape: DistH2Shape, d: DistH2Data, xhat,
         return jnp.einsum("nkj,njv->nkv", s_mar,
                           xg.reshape(rows, maxb * width, nv))
 
-    for l in range(lc, depth + 1):
-        i = l - lc
-        k = dshape.ranks[l]
-        if k == 0 or (l == lc and p > 1):     # lc rode the C-level gather
-            continue
-        if yhat[l] is None:
-            yhat[l] = _fused_level(xhat[l], l, d.hp_br[i],
-                                   dshape.br_offsets[i], dshape.br_caps[i],
-                                   d.s_br_mar[i], k)
+    with phase("hgemv/off-gemm"):
+        for l in range(lc, depth + 1):
+            i = l - lc
+            k = dshape.ranks[l]
+            if k == 0 or (l == lc and p > 1):  # lc rode the C-level gather
+                continue
+            if yhat[l] is None:
+                yhat[l] = _fused_level(xhat[l], l, d.hp_br[i],
+                                       dshape.br_offsets[i],
+                                       dshape.br_caps[i], d.s_br_mar[i], k)
+            else:
+                yhat[l] = _off_merge(yhat[l], xhat[l], l, d.hp_br[i],
+                                     dshape.br_offsets[i],
+                                     dshape.br_caps[i],
+                                     d.s_br_mar_off[i], k)
+        if y_de is None:
+            y_de = _fused_level(x_leaves, DENSE, d.hp_dense,
+                                dshape.dense_offsets, dshape.dense_caps,
+                                d.dense_mar, m)
         else:
-            yhat[l] = _off_merge(yhat[l], xhat[l], l, d.hp_br[i],
-                                 dshape.br_offsets[i], dshape.br_caps[i],
-                                 d.s_br_mar_off[i], k)
-    if y_de is None:
-        y_de = _fused_level(x_leaves, DENSE, d.hp_dense,
-                            dshape.dense_offsets, dshape.dense_caps,
-                            d.dense_mar, m)
-    else:
-        y_de = _off_merge(y_de, x_leaves, DENSE, d.hp_dense,
-                          dshape.dense_offsets, dshape.dense_caps,
-                          d.dense_mar_off, m)
+            y_de = _off_merge(y_de, x_leaves, DENSE, d.hp_dense,
+                              dshape.dense_offsets, dshape.dense_caps,
+                              d.dense_mar_off, m)
     return yhat, yhat_top, y_de
 
 
 def _local_downsweep(dshape: DistH2Shape, d: DistH2Data, yhat, yhat_top,
                      axis):
-    depth, lc = dshape.depth, dshape.lc
-    me = jax.lax.axis_index(axis)
-    nv = yhat[depth].shape[-1]
-    # replicated top downsweep 0 -> lc
-    if lc > 0:
-        acc = yhat_top[0]
-        for l in range(1, lc + 1):
+    with phase("hgemv/downsweep"):
+        depth, lc = dshape.depth, dshape.lc
+        me = jax.lax.axis_index(axis)
+        nv = yhat[depth].shape[-1]
+        # replicated top downsweep 0 -> lc
+        if lc > 0:
+            acc = yhat_top[0]
+            for l in range(1, lc + 1):
+                par = jnp.repeat(acc, 2, axis=0)
+                step = jnp.einsum("ckp,cpv->ckv", d.e_top[l], par)
+                add = yhat_top[l] if l < lc else 0.0
+                acc = step + add
+            own = jax.lax.dynamic_slice_in_dim(acc, me, 1, axis=0)
+            acc = yhat[lc] + own
+        else:
+            acc = yhat[lc]
+        for l in range(lc + 1, depth + 1):
             par = jnp.repeat(acc, 2, axis=0)
-            step = jnp.einsum("ckp,cpv->ckv", d.e_top[l], par)
-            add = yhat_top[l] if l < lc else 0.0
-            acc = step + add
-        own = jax.lax.dynamic_slice_in_dim(acc, me, 1, axis=0)  # [1, k, nv]
-        acc = yhat[lc] + own
-    else:
-        acc = yhat[lc]
-    for l in range(lc + 1, depth + 1):
-        par = jnp.repeat(acc, 2, axis=0)
-        acc = yhat[l] + jnp.einsum("ckp,cpv->ckv", d.e_br[l - lc], par)
-    return jnp.einsum("bmk,bkv->bmv", d.u_leaf, acc)
+            acc = yhat[l] + jnp.einsum("ckp,cpv->ckv", d.e_br[l - lc], par)
+        return jnp.einsum("bmk,bkv->bmv", d.u_leaf, acc)
 
 
 def _dense_phase(dshape: DistH2Shape, d: DistH2Data, x_leaves, axis,
-                 comm: str):
+                 comm: str, gathered: Optional[jax.Array] = None):
+    """``gathered`` (allgather mode only) optionally supplies the already
+    all_gather'ed full leaf tensor ``[2**depth, m, nv]`` so the exchange
+    can be cut into its own stage program (obs segmented replay)."""
     p = dshape.p
     nloc = dshape.leaves_per_dev
     m = dshape.leaf_size
@@ -636,17 +712,24 @@ def _dense_phase(dshape: DistH2Shape, d: DistH2Data, x_leaves, axis,
     d_mar = d.dense_mar                       # [nloc, m, dmaxb*m] per device
     dmaxb = d_mar.shape[-1] // m
     if comm == "allgather" and p > 1:
-        xg_full = jax.lax.all_gather(x_leaves, axis, tiled=True)
-        xg = jnp.take(xg_full, d.pd_col, axis=0)
+        with phase("hgemv/exchange"):
+            xg_full = gathered if gathered is not None else \
+                jax.lax.all_gather(x_leaves, axis, tiled=True)
+        with phase("hgemv/dense"):
+            xg = jnp.take(xg_full, d.pd_col, axis=0)
     else:
-        rad = dshape.dense_radius if p > 1 else 0
-        src = jax.lax.optimization_barrier(x_leaves.astype(jnp.bfloat16)) \
-            if comm == "ppermute-bf16" else x_leaves
-        halo = _halo_exchange(src, axis, rad, p)
-        idx = d.pd_col - me * nloc + rad * nloc
-        xg = jnp.take(halo, idx, axis=0).astype(x_leaves.dtype)
-    return jnp.einsum("nkj,njv->nkv", d_mar,
-                      xg.reshape(nloc, dmaxb * m, nv))
+        with phase("hgemv/exchange"):
+            rad = dshape.dense_radius if p > 1 else 0
+            src = jax.lax.optimization_barrier(
+                x_leaves.astype(jnp.bfloat16)) \
+                if comm == "ppermute-bf16" else x_leaves
+            halo = _halo_exchange(src, axis, rad, p)
+        with phase("hgemv/dense"):
+            idx = d.pd_col - me * nloc + rad * nloc
+            xg = jnp.take(halo, idx, axis=0).astype(x_leaves.dtype)
+    with phase("hgemv/dense"):
+        return jnp.einsum("nkj,njv->nkv", d_mar,
+                          xg.reshape(nloc, dmaxb * m, nv))
 
 
 def dist_h2_matvec_local(dshape: DistH2Shape, d: DistH2Data, x: jax.Array,

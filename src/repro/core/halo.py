@@ -60,6 +60,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs.trace import phase
+
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
@@ -327,12 +329,14 @@ def start_halo(x: jax.Array, plan: HaloPlan, offsets: Sequence[int], axis,
     """
     chunks = []
     for delta, idx in zip(offsets, plan.send):
-        packed = jnp.take(x, idx, axis=0)
-        if bf16:
-            packed = jax.lax.optimization_barrier(
-                packed.astype(jnp.bfloat16))
+        with phase("halo/pack"):
+            packed = jnp.take(x, idx, axis=0)
+            if bf16:
+                packed = jax.lax.optimization_barrier(
+                    packed.astype(jnp.bfloat16))
         perm = [(src, (src - delta) % p) for src in range(p)]
-        chunks.append(jax.lax.ppermute(packed, axis, perm))
+        with phase("halo/round"):
+            chunks.append(jax.lax.ppermute(packed, axis, perm))
     return chunks
 
 
@@ -340,7 +344,9 @@ def land_halo(x: jax.Array, chunks: Sequence[jax.Array]) -> jax.Array:
     """Concatenate own rows + landed chunks into the plan's buffer layout."""
     if not chunks:
         return x
-    return jnp.concatenate([x] + [c.astype(x.dtype) for c in chunks], axis=0)
+    with phase("halo/land"):
+        return jnp.concatenate([x] + [c.astype(x.dtype) for c in chunks],
+                               axis=0)
 
 
 def exchange(x: jax.Array, plan: HaloPlan, offsets: Sequence[int], axis,

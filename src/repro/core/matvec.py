@@ -25,6 +25,8 @@ from typing import List, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.obs.trace import phase
+
 from .structure import H2Data, H2Shape
 
 
@@ -149,10 +151,14 @@ def h2_matvec(shape: H2Shape, data: H2Data, x: jax.Array,
     """y = A x with A = A_de + <U,S,V^T>;  x: [N, nv] in tree order."""
     nv = x.shape[-1]
     x_leaves = x.reshape(shape.n_leaves, shape.leaf_size, nv)
-    xhat = upsweep(shape, data, x_leaves, backend)
-    yhat = coupling_multiply(shape, data, xhat, backend)
-    y_lr = downsweep(shape, data, yhat, backend)
-    y_de = dense_multiply(shape, data, x_leaves, backend)
+    with phase("hgemv/upsweep"):
+        xhat = upsweep(shape, data, x_leaves, backend)
+    with phase("hgemv/coupling-gemm"):
+        yhat = coupling_multiply(shape, data, xhat, backend)
+    with phase("hgemv/downsweep"):
+        y_lr = downsweep(shape, data, yhat, backend)
+    with phase("hgemv/dense"):
+        y_de = dense_multiply(shape, data, x_leaves, backend)
     return (y_lr + y_de).reshape(shape.n, nv)
 
 

@@ -17,6 +17,8 @@ from typing import List, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.obs.trace import phase
+
 from .structure import H2Data, H2Shape, remarshal
 
 
@@ -60,21 +62,25 @@ def _orthogonalize_impl(shape: H2Shape, data: H2Data, backend: str,
     jit the two trees flatten to distinct tracers, so an ``is`` check here
     would silently factor the symmetric tree twice.
     """
-    u_leaf, e_new, ru = orthogonalize_tree(data.u_leaf, data.e, backend)
-    if aliased and shape.symmetric:
-        v_leaf, f_new, rv = u_leaf, e_new, ru
-    else:
-        v_leaf, f_new, rv = orthogonalize_tree(data.v_leaf, data.f, backend)
+    with phase("compress/orthogonalize"):
+        u_leaf, e_new, ru = orthogonalize_tree(data.u_leaf, data.e, backend)
+        if aliased and shape.symmetric:
+            v_leaf, f_new, rv = u_leaf, e_new, ru
+        else:
+            v_leaf, f_new, rv = orthogonalize_tree(data.v_leaf, data.f,
+                                                   backend)
 
     s_new = []
-    for l in range(shape.depth + 1):
-        if shape.coupling_counts[l] == 0:
-            s_new.append(jnp.zeros((0, ru[l].shape[-2], rv[l].shape[-2]),
-                                   data.u_leaf.dtype))
-            continue
-        rl = jnp.take(ru[l], data.s_rows[l], axis=0)        # [nb, k', k]
-        rr = jnp.take(rv[l], data.s_cols[l], axis=0)
-        s_new.append(jnp.einsum("bij,bjk,blk->bil", rl, data.s[l], rr))
+    with phase("compress/project-s"):
+        for l in range(shape.depth + 1):
+            if shape.coupling_counts[l] == 0:
+                s_new.append(jnp.zeros((0, ru[l].shape[-2],
+                                        rv[l].shape[-2]),
+                                       data.u_leaf.dtype))
+                continue
+            rl = jnp.take(ru[l], data.s_rows[l], axis=0)    # [nb, k', k]
+            rr = jnp.take(rv[l], data.s_cols[l], axis=0)
+            s_new.append(jnp.einsum("bij,bjk,blk->bil", rl, data.s[l], rr))
     # structure (and therefore the plan) is unchanged; S values are new,
     # so the marshaled buffers are regathered from the plan
     return remarshal(H2Data(

@@ -1,0 +1,105 @@
+"""Unified per-phase records: measured time x modeled flops x comm bytes.
+
+One ``PhaseRecord`` joins, for a named phase of a (distributed) program:
+
+  * measured wall time (``obs.timers`` segmented replay, microseconds);
+  * modeled flops/bytes (``perf.jaxpr_cost.analyze`` on the stage program —
+    global across the mesh, divide by ``p`` for per-device numbers);
+  * modeled per-device collective bytes (the analytic comm models:
+    ``core.dist.matvec_comm_bytes`` and friends, supplied by the caller);
+  * *measured* per-device collective bytes (``perf.hlo_cost`` on the
+    partitioned HLO of the stage program, normalized to wire bytes).
+
+The collective-byte normalization (``wire_bytes``): ``hlo_cost`` counts the
+RESULT shape of each collective op, while the analytic models count bytes a
+device actually ships/receives on the wire.  For a tiled ``all-gather`` the
+result holds all ``p`` slices but only ``p-1`` crossed the wire; an
+``all-reduce``'s result is one payload but a ring moves ~``(p-1)``x the
+payload per device (the models count the psum'd scalars that way); a
+``collective-permute`` result is exactly the wire payload.  ``wire_bytes``
+applies those per-kind factors so model and measurement are in the same
+units — the cross-check tests (dist worker) assert they agree.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Callable, Dict, List, Optional
+
+import jax
+
+from repro.perf import hlo_cost, jaxpr_cost
+
+# measured-result-bytes -> wire-bytes factor per collective kind, as a
+# function of device count p (see module docstring)
+_WIRE_FACTOR = {
+    "all-gather": lambda p: (p - 1) / p,
+    "reduce-scatter": lambda p: (p - 1) / p,
+    "all-reduce": lambda p: float(p - 1),
+    "all-to-all": lambda p: (p - 1) / p,
+    "collective-permute": lambda p: 1.0,
+}
+
+
+@dataclasses.dataclass
+class PhaseRecord:
+    """One phase's joined measurement/model row (times in microseconds,
+    byte fields per device, flops global)."""
+    phase: str
+    us: Optional[float] = None
+    model_flops: Optional[float] = None
+    model_bytes: Optional[float] = None             # unfused HBM bound
+    model_comm_bytes: Optional[float] = None        # analytic model
+    measured_comm_bytes: Optional[float] = None     # hlo_cost, wire units
+    measured_comm_by_kind: Optional[Dict[str, float]] = None
+    extra: Dict = dataclasses.field(default_factory=dict)
+
+    def to_dict(self) -> Dict:
+        d = {k: v for k, v in dataclasses.asdict(self).items()
+             if v not in (None, {}, [])}
+        extra = d.pop("extra", {})
+        d.update(extra)
+        return d
+
+
+def wire_bytes(by_kind: Dict[str, float], p: int) -> float:
+    """Total wire bytes per device from hlo_cost's per-kind result bytes."""
+    total = 0.0
+    for kind, b in by_kind.items():
+        total += b * _WIRE_FACTOR.get(kind, lambda _: 1.0)(p)
+    return total
+
+
+def measured_collective_bytes(fn: Callable, *args) -> Dict[str, float]:
+    """Per-collective-kind RESULT bytes of ``fn``'s partitioned HLO
+    (loop-trip-corrected).  ``fn`` must be jit-wrapped; args concrete."""
+    text = jax.jit(fn).lower(*args).compile().as_text() \
+        if not hasattr(fn, "lower") else \
+        fn.lower(*args).compile().as_text()
+    return hlo_cost.collective_bytes(text)
+
+
+def phase_record(phase: str, us: Optional[float] = None,
+                 fn: Optional[Callable] = None, args: tuple = (),
+                 model_comm_bytes: Optional[float] = None,
+                 p: int = 1, **extra) -> PhaseRecord:
+    """Build one record; when ``fn`` is given, derive the modeled flops
+    (jaxpr walk) and measured collective bytes (partitioned HLO) from it."""
+    rec = PhaseRecord(phase=phase, us=us,
+                      model_comm_bytes=model_comm_bytes, extra=extra)
+    if fn is not None:
+        cost = jaxpr_cost.analyze(fn, *args)
+        rec.model_flops = cost["flops"]
+        rec.model_bytes = cost["bytes"]
+        by_kind = measured_collective_bytes(fn, *args)
+        rec.measured_comm_by_kind = by_kind
+        rec.measured_comm_bytes = wire_bytes(by_kind, p)
+    return rec
+
+
+def records_to_json(records: List[PhaseRecord], path: str, **header) -> None:
+    """Serialize records (+ a header dict) as a JSON document."""
+    doc = dict(header)
+    doc["phases"] = [r.to_dict() for r in records]
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)

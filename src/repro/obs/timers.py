@@ -1,0 +1,175 @@
+"""Opt-in phase timers (DESIGN.md §8).
+
+The default solve path is ONE jitted program with no host callbacks, so
+per-phase wall time cannot be read out of a production run.  This module
+provides the two sanctioned ways to measure it, both *opt-in* and both
+leaving the default program untouched:
+
+1. **Segmented replay** (``Stage``/``run_stages``/``time_stages``): the
+   jitted program is re-expressed as a pipeline of separately-jitted stage
+   programs cut at registered phase boundaries (``obs.profile_solve``
+   builds the canonical cut of the distributed fractional solve).  Each
+   stage is warmed up once, then timed with fixed inputs in interleaved
+   rounds, every run ``block_until_ready``'d, median per stage — the same
+   drift-cancelling methodology as ``benchmarks/dist_bench.py``.  Replay
+   measures each phase's own cost; the sum over stages bounds the fused
+   program's time from above (the fused program additionally overlaps
+   phases, which is exactly the gap the report surfaces).
+
+2. **In-graph coarse mode** (``IterationTimer``): an ``io_callback``
+   timestamp stamped once per solver iteration.  This DOES add a callback
+   primitive to the jaxpr, so it is forbidden on the default path — it is
+   for ad-hoc investigation only, and ``tests`` assert the default solve
+   stays callback-free.
+
+``time_fn`` / ``interleaved_times`` are the shared plain timers the
+benchmarks (`hgemv`, `compression_bench`, `dist_bench`, `solver_bench`)
+route through.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Mapping, Sequence, Tuple
+
+import jax
+import numpy as np
+
+
+def time_fn(fn: Callable, *args, reps: int = 10, warmup: int = 1) -> float:
+    """Trimmed-mean seconds per call (drops min/max when reps > 2).
+
+    The warmup call absorbs compilation; every timed call is
+    ``block_until_ready``'d.
+    """
+    for _ in range(max(warmup, 0)):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return float(np.mean(ts[1:-1])) if len(ts) > 2 else float(np.mean(ts))
+
+
+def interleaved_times(fns: Mapping[str, Callable], reps: int = 10,
+                      warmup: int = 1) -> Dict[str, List[float]]:
+    """Round-robin timing of competing variants (comm modes, schedules).
+
+    Within one round every variant sees the same machine state, so
+    per-round ratios cancel the shared host's throughput drift — take
+    ``median_ratio`` of two entries for a drift-free speedup.
+    """
+    for fn in fns.values():
+        for _ in range(max(warmup, 0)):
+            jax.block_until_ready(fn())
+    acc: Dict[str, List[float]] = {name: [] for name in fns}
+    for _ in range(reps):
+        for name, fn in fns.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            acc[name].append(time.perf_counter() - t0)
+    return acc
+
+
+def median_ratio(num: Sequence[float], den: Sequence[float]) -> float:
+    """Median of per-round ratios num[i]/den[i] (drift-cancelling)."""
+    return float(np.median([a / h for a, h in zip(num, den)]))
+
+
+# ---------------------------------------------------------------------------
+# segmented replay
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Stage:
+    """One phase-boundary cut of a jitted pipeline.
+
+    ``fn`` is the (jitted) stage program; ``inputs`` name entries of the
+    environment dict fed positionally; ``outputs`` name where the results
+    land (a single name binds the whole return value, several names unpack
+    a top-level tuple).  ``phase`` is the phase name the stage's time is
+    attributed to (defaults to ``name``).
+    """
+    name: str
+    fn: Callable
+    inputs: Tuple[str, ...]
+    outputs: Tuple[str, ...]
+    phase: str = ""
+
+    def __post_init__(self):
+        if not self.phase:
+            self.phase = self.name
+
+
+def run_stages(stages: Sequence[Stage], env: Dict) -> Dict:
+    """Execute the pipeline once, threading results through ``env``
+    (mutated in place and returned).  Used to warm up + populate realistic
+    stage inputs before timing."""
+    for s in stages:
+        out = jax.block_until_ready(s.fn(*(env[k] for k in s.inputs)))
+        if len(s.outputs) == 1:
+            env[s.outputs[0]] = out
+        else:
+            assert len(out) == len(s.outputs), (s.name, len(s.outputs))
+            env.update(zip(s.outputs, out))
+    return env
+
+
+def time_stages(stages: Sequence[Stage], env: Dict, reps: int = 8
+                ) -> Dict[str, float]:
+    """Median seconds per stage, interleaved rounds, fixed inputs.
+
+    ``env`` must already hold every stage input (call ``run_stages``
+    first); inputs are NOT re-propagated between timed runs so each stage
+    sees identical operands every round.
+    """
+    run_stages(stages, env)                    # warmup (compile) + populate
+    acc: Dict[str, List[float]] = {s.name: [] for s in stages}
+    for _ in range(reps):
+        for s in stages:
+            args = tuple(env[k] for k in s.inputs)
+            with jax.profiler.TraceAnnotation(f"obs.replay/{s.name}"):
+                t0 = time.perf_counter()
+                jax.block_until_ready(s.fn(*args))
+                acc[s.name].append(time.perf_counter() - t0)
+    return {name: float(np.median(ts)) for name, ts in acc.items()}
+
+
+# ---------------------------------------------------------------------------
+# in-graph coarse mode (opt-in; NOT jaxpr-neutral)
+# ---------------------------------------------------------------------------
+
+class IterationTimer:
+    """Coarse per-iteration timestamps via an ordered host callback.
+
+    ``wrap(fn)`` returns a function that stamps ``time.perf_counter()`` on
+    the host every time the traced program executes ``fn`` (e.g. wrap the
+    solver's ``apply_a`` to stamp once per Krylov iteration).  The callback
+    IS a jaxpr primitive — this mode must never be used on the default
+    solve path (the trace-neutrality tests enforce that the default stays
+    callback-free); it exists for ad-hoc iteration-cadence checks where
+    segmented replay is too coarse.
+    """
+
+    def __init__(self):
+        self.stamps: List[float] = []
+
+    def _stamp(self) -> None:
+        self.stamps.append(time.perf_counter())
+
+    def reset(self) -> None:
+        self.stamps = []
+
+    def wrap(self, fn: Callable) -> Callable:
+        from jax.experimental import io_callback
+
+        def wrapped(*args):
+            io_callback(self._stamp, None, ordered=True)
+            return fn(*args)
+        return wrapped
+
+    def intervals(self) -> np.ndarray:
+        """Seconds between consecutive stamps (≈ per-iteration time)."""
+        return np.diff(np.asarray(self.stamps))

@@ -1,0 +1,77 @@
+"""Jit-safe phase annotation (DESIGN.md §8).
+
+``phase("hgemv/upsweep")`` wraps a block of traced code in a
+``jax.named_scope`` (names the HLO ops for profiles and post-SPMD dumps)
+plus a ``jax.profiler.TraceAnnotation`` (labels the host-side region when a
+profiler session is active).  Both are *metadata-only*: neither adds a
+primitive to the jaxpr, so the annotated HGEMV / distributed-solve programs
+stay byte-identical to the unannotated ones — the callback-free /
+no-retrace invariants of the solver subsystem hold with annotation enabled,
+which is the default.  ``tests/test_obs.py`` and the dist worker assert
+``str(jax.make_jaxpr(...))`` equality enabled-vs-disabled.
+
+Because annotation is zero-cost in the compiled program, the *disable*
+switch exists only to prove neutrality in tests (and as an escape hatch if
+a future jax version breaks the invariant): set ``REPRO_OBS_DISABLE=1`` in
+the environment or call ``set_enabled(False)`` before tracing.
+
+Host-side, every ``phase`` entered during a trace is recorded in
+``PHASES_SEEN`` — the registry ``obs.timers``/``obs.profile_solve`` use to
+sanity-check that a phase name used for timing actually exists in the
+annotated program family.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+from typing import Iterator, Set
+
+import jax
+
+# names of every phase entered while enabled (host-side registry; names are
+# static python strings, so this never leaks tracers)
+PHASES_SEEN: Set[str] = set()
+
+_ENABLED = os.environ.get("REPRO_OBS_DISABLE", "0") != "1"
+
+
+def enabled() -> bool:
+    return _ENABLED
+
+
+def set_enabled(flag: bool) -> None:
+    """Toggle annotation for subsequently *traced* programs (already-jitted
+    executables are unaffected — the scopes were baked in at trace time)."""
+    global _ENABLED
+    _ENABLED = bool(flag)
+
+
+@contextlib.contextmanager
+def phase(name: str) -> Iterator[None]:
+    """Annotate the enclosed traced ops as belonging to ``name``.
+
+    Phase names are hierarchical slash-paths ("hgemv/upsweep",
+    "precond/vcycle", "mg/level0", ...); nesting ``phase`` blocks nests the
+    scopes.  Safe inside ``lax.while_loop``/``scan`` bodies and inside
+    ``shard_map`` — it introduces no primitive, no host callback and no
+    tracer-dependent python control flow.
+    """
+    if not _ENABLED:
+        yield
+        return
+    PHASES_SEEN.add(name)
+    with jax.named_scope(name), jax.profiler.TraceAnnotation(name):
+        yield
+
+
+def annotate(name: str):
+    """Decorator form: ``@annotate("hgemv/upsweep")`` wraps every call."""
+    def deco(fn):
+        import functools
+
+        @functools.wraps(fn)
+        def wrapped(*args, **kwargs):
+            with phase(name):
+                return fn(*args, **kwargs)
+        return wrapped
+    return deco

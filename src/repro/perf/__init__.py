@@ -1,0 +1,13 @@
+"""Cost models: jaxpr flop/byte walk and compiled-HLO collective bytes.
+
+``jaxpr_cost.analyze`` models flops/HBM bytes from the jaxpr (global across
+a shard_map mesh); ``hlo_cost.collective_bytes`` measures per-device
+collective result bytes from the partitioned HLO (loop-trip-corrected).
+``obs.metrics`` joins the two per phase.
+"""
+from repro.perf import hlo_cost, jaxpr_cost
+from repro.perf.hlo_cost import collective_bytes, collective_bytes_flat
+from repro.perf.jaxpr_cost import analyze, count_jaxpr
+
+__all__ = ["jaxpr_cost", "hlo_cost", "analyze", "count_jaxpr",
+           "collective_bytes", "collective_bytes_flat"]

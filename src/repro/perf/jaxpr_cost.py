@@ -2,10 +2,9 @@
 counts.
 
 XLA's ``compiled.cost_analysis()`` visits each while-loop body ONCE, so a
-64-layer scanned model under-reports by 64x (verified empirically — see
-EXPERIMENTS.md §Roofline methodology).  This walker multiplies ``scan``
-bodies by their trip count, recurses through pjit/remat/shard_map/cond, and
-counts:
+solver whose ``while_loop`` runs 200 iterations under-reports by 200x.
+This walker multiplies ``scan`` bodies by their trip count, recurses
+through pjit/remat/shard_map/cond, and counts:
 
   * flops — 2*M*N*K per dot_general (batch dims included), 1 flop/element
     for elementwise ops (exp/log etc. weighted heavier);

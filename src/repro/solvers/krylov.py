@@ -33,6 +33,8 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.obs.trace import phase
+
 # retrace counters, keyed by program name (test hook — mirrors
 # core/compression.TRACE_COUNTS)
 TRACE_COUNTS = {"pcg": 0, "block_cg": 0, "gmres": 0,
@@ -117,17 +119,21 @@ def pcg(apply_a: Callable, b: jax.Array,
 
     def body(state):
         k, x, r, p, rz, _, hist = state
-        ap = apply_a(p)
-        pap = _dot(p, ap, axis)
-        alpha = rz / jnp.where(pap != 0, pap, 1.0)
-        x = x + alpha * p
-        r = r - alpha * ap
-        res = _norm(r, axis)
-        z = m(r)
-        rz_new = _dot(r, z, axis)
-        beta = rz_new / jnp.where(rz != 0, rz, 1.0)
-        p = z + beta * p
-        hist = hist.at[k + 1].set(res / bn_safe)
+        with phase("krylov/apply-A"):
+            ap = apply_a(p)
+        with phase("krylov/scalars"):
+            pap = _dot(p, ap, axis)
+            alpha = rz / jnp.where(pap != 0, pap, 1.0)
+            x = x + alpha * p
+            r = r - alpha * ap
+            res = _norm(r, axis)
+        with phase("krylov/precond"):
+            z = m(r)
+        with phase("krylov/scalars"):
+            rz_new = _dot(r, z, axis)
+            beta = rz_new / jnp.where(rz != 0, rz, 1.0)
+            p = z + beta * p
+            hist = hist.at[k + 1].set(res / bn_safe)
         return k + 1, x, r, p, rz_new, res, hist
 
     state = (jnp.int32(0), x, r, p, rz, res, hist)
@@ -170,13 +176,15 @@ def block_cg(apply_a: Callable, b: jax.Array,
     def body(state):
         k, x, r, p, rz, res, hist, iters = state
         active = res > tol * b_norm                        # [nv]
-        ap = apply_a(p)
+        with phase("krylov/apply-A"):
+            ap = apply_a(p)
         pap = _cdot(p, ap, axis)
         alpha = jnp.where(active, rz / jnp.where(pap != 0, pap, 1.0), 0.0)
         x = x + alpha[None, :] * p
         r = jnp.where(active[None, :], r - alpha[None, :] * ap, r)
         res = jnp.sqrt(_cdot(r, r, axis))
-        z = m(r)
+        with phase("krylov/precond"):
+            z = m(r)
         rz_new = jnp.where(active, _cdot(r, z, axis), rz)
         beta = jnp.where(active, rz_new / jnp.where(rz != 0, rz, 1.0), 0.0)
         p = jnp.where(active[None, :], z + beta[None, :] * p, p)
@@ -214,7 +222,8 @@ def _arnoldi(op: Callable, v0: jax.Array, m: int, axis=None):
 
     def step(j, carry):
         V, H = carry
-        w = op(V[j])
+        with phase("krylov/apply-A"):
+            w = op(V[j])
         mask = (jnp.arange(m + 1) <= j).astype(w.dtype)
         h1 = vdot_all(V, w) * mask
         w = w - jnp.tensordot(h1, V, axes=1)
@@ -269,10 +278,12 @@ def gmres(apply_a: Callable, b: jax.Array,
         # the true residual of the accepted iterate rides the loop state,
         # so each restart costs m+1 operator applications, not m+2
         k, x, r, res_old, hist, _ = state
-        z = mp(r)
+        with phase("krylov/precond"):
+            z = mp(r)
         beta = _norm(z, axis)
         beta_safe = jnp.where(beta > 0, beta, 1.0)
-        V, H = _arnoldi(op, z / beta_safe, m, axis)
+        with phase("krylov/arnoldi"):
+            V, H = _arnoldi(op, z / beta_safe, m, axis)
         # min_y ||beta e1 - H y||: ridge-regularized normal equations keep
         # the solve well-posed through happy breakdown (zero H columns)
         e1 = jnp.zeros((m + 1,), b.dtype).at[0].set(beta)

@@ -34,6 +34,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs.trace import phase
+
 
 @dataclasses.dataclass(frozen=True)
 class GridMG:
@@ -191,20 +193,27 @@ def _prolong(e):
 
 
 def _vcycle(mg: GridMG, a: MGArrays, l: int, b, axis):
-    u = _smooth(mg, a, l, jnp.zeros_like(b), b, axis)
-    if l + 1 < len(mg.levels):
-        r = b - _apply_op(mg, a, l, u, axis)
-        rc = _restrict(r)
-        if mg.sharded(l) and not mg.sharded(l + 1):
-            # sharded -> replicated switch: gather the coarse strips so the
-            # tiny tail levels run redundantly on every device
+    # python recursion over static levels: each level's ops get their own
+    # named scope ("mg/level0", "mg/level1", ...) in profiles
+    with phase(f"mg/level{l}"):
+        u = _smooth(mg, a, l, jnp.zeros_like(b), b, axis)
+        if l + 1 < len(mg.levels):
+            r = b - _apply_op(mg, a, l, u, axis)
+            rc = _restrict(r)
+        else:
+            return u
+    if mg.sharded(l) and not mg.sharded(l + 1):
+        # sharded -> replicated switch: gather the coarse strips so the
+        # tiny tail levels run redundantly on every device
+        with phase("mg/coarse-gather"):
             rlc = rc.shape[0]
             rc_full = jax.lax.all_gather(rc, axis, axis=0, tiled=True)
-            e = _vcycle(mg, a, l + 1, rc_full, axis)
-            me = jax.lax.axis_index(axis)
-            e = jax.lax.dynamic_slice_in_dim(e, me * rlc, rlc, axis=0)
-        else:
-            e = _vcycle(mg, a, l + 1, rc, axis)
+        e = _vcycle(mg, a, l + 1, rc_full, axis)
+        me = jax.lax.axis_index(axis)
+        e = jax.lax.dynamic_slice_in_dim(e, me * rlc, rlc, axis=0)
+    else:
+        e = _vcycle(mg, a, l + 1, rc, axis)
+    with phase(f"mg/level{l}"):
         u = u + _prolong(e)
         u = _smooth(mg, a, l, u, b, axis)
     return u
@@ -220,20 +229,22 @@ def mg_precond_local(mg: GridMG, a: MGArrays, r: jax.Array, axis=None
     inverts the UNSCALED local operator ``gamma*C + diag(D)`` while the
     fractional system carries the paper's ``h^2`` prefactor.
     """
-    h0 = mg.hs[0]
-    strip = mg.p > 1
-    rows = (mg.n // mg.p) if strip else mg.n
-    b = r.reshape(rows, mg.n) / (h0 * h0)
-    gathered = strip and mg.n_sharded == 0
-    if gathered:     # too coarse to shard even level 0: replicate throughout
-        b = jax.lax.all_gather(b, axis, axis=0, tiled=True)
-    u = jnp.zeros_like(b)
-    for _ in range(mg.n_cycles):
-        u = u + _vcycle(mg, a, 0, b - _apply_op(mg, a, 0, u, axis), axis)
-    if gathered:
-        me = jax.lax.axis_index(axis)
-        u = jax.lax.dynamic_slice_in_dim(u, me * rows, rows, axis=0)
-    return u.reshape(r.shape)
+    with phase("precond/vcycle"):
+        h0 = mg.hs[0]
+        strip = mg.p > 1
+        rows = (mg.n // mg.p) if strip else mg.n
+        b = r.reshape(rows, mg.n) / (h0 * h0)
+        gathered = strip and mg.n_sharded == 0
+        if gathered:  # too coarse to shard even level 0: replicate fully
+            b = jax.lax.all_gather(b, axis, axis=0, tiled=True)
+        u = jnp.zeros_like(b)
+        for _ in range(mg.n_cycles):
+            u = u + _vcycle(mg, a, 0, b - _apply_op(mg, a, 0, u, axis),
+                            axis)
+        if gathered:
+            me = jax.lax.axis_index(axis)
+            u = jax.lax.dynamic_slice_in_dim(u, me * rows, rows, axis=0)
+        return u.reshape(r.shape)
 
 
 def mg_halo_bytes(mg: GridMG, bytes_per_el: int = 4) -> int:

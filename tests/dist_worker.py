@@ -16,6 +16,12 @@ geometries — same iteration count, matching solutions, no retrace on
 repeat calls, callback-free jaxpr — plus the end-to-end distributed
 fractional-diffusion solve against the single-device and dense-direct
 references.
+
+Observability layer (repro/obs): the *measured* collective bytes of the
+partitioned HLO (perf.hlo_cost, wire-normalized by obs.metrics) must
+agree with the analytic comm models for every comm mode, and the
+always-on phase annotations must leave the distributed matvec and the
+fused solve jaxprs byte-identical when disabled.
 """
 import os
 
@@ -173,6 +179,7 @@ def main():
                         "graded1d": (shape1, data1)})
     mg_gathered_check(rng)
     fractional_checks()
+    obs_checks(mesh, dshape, ddata_dev, x_dev)   # LAST: clears jit caches
 
     print("ALL_OK")
 
@@ -301,6 +308,81 @@ def fractional_checks():
                                   res["b"])
             print("OK frac_dist_jaxpr_callback_free")
         print(f"OK frac_dist_p{p}", res["iters"], du, dd)
+
+
+def obs_checks(mesh, dshape, dd, x_dev):
+    """Measured-vs-modeled collective bytes + trace neutrality at p=8.
+
+    Matvec: ``perf.hlo_cost`` collective bytes of the partitioned HLO,
+    wire-normalized (``obs.metrics.wire_bytes``), must match
+    ``matvec_comm_bytes`` within 10% for all three comm modes — the
+    models the roofline/profiling layers report are thereby *measured*,
+    not just asserted.  Solve: XLA lowers the PCG while-loop so the body's
+    collectives appear once (plus the prologue's), so the measurement
+    lands between 1x and 2.5x one iteration's model; the halo-plan-vs-
+    allgather byte DELTA, however, is exchange-volume only and must match
+    the model delta almost exactly.  Trace neutrality: the jaxprs of the
+    distributed matvec and the fused solve are byte-identical with phase
+    annotations on (default) and off — run LAST because forcing fresh
+    traces clears the jit caches.
+    """
+    from repro.apps.fractional import (FractionalProblem,
+                                       dist_solve_comm_bytes,
+                                       make_dist_solve)
+    from repro.obs import metrics, trace
+
+    for comm in ("halo-plan", "ppermute", "allgather"):
+        mv = make_dist_matvec(dshape, mesh, "blk", comm=comm)
+        by_kind = metrics.measured_collective_bytes(mv, dd, x_dev)
+        meas = metrics.wire_bytes(by_kind, dshape.p)
+        model = matvec_comm_bytes(dshape, 4, comm)
+        ratio = meas / model
+        assert 0.9 <= ratio <= 1.1, (comm, meas, model, by_kind)
+        print(f"OK obs_comm_bytes_{comm}", meas, model, round(ratio, 3))
+
+    n = 16
+    prob = FractionalProblem(n).build()
+    b = jnp.ones((n * n,), jnp.float32) * prob["h"] ** 2
+    b_dev = jax.device_put(b, NamedSharding(mesh, P("blk")))
+    solve_meas, solve_model, solve_parts = {}, {}, {}
+    for comm in ("halo-plan", "allgather"):
+        parts = make_dist_solve(prob, mesh, comm=comm, tol=1e-8,
+                                maxiter=200)
+        pargs = parts["place"](parts["args"])
+        by_kind = metrics.measured_collective_bytes(parts["fn"],
+                                                    *pargs, b_dev)
+        meas = metrics.wire_bytes(by_kind, dshape.p)
+        model = dist_solve_comm_bytes(parts["dshape"], parts["mg"], comm)
+        ratio = meas / model
+        assert 1.0 <= ratio <= 2.5, (comm, meas, model, by_kind)
+        solve_meas[comm], solve_model[comm] = meas, model
+        solve_parts[comm] = (parts, pargs)
+        print(f"OK obs_solve_bytes_{comm}", meas, model, round(ratio, 3))
+    d_meas = solve_meas["halo-plan"] - solve_meas["allgather"]
+    d_model = solve_model["halo-plan"] - solve_model["allgather"]
+    assert abs(d_meas - d_model) <= 0.02 * solve_model["allgather"] + 64, \
+        (d_meas, d_model)
+    print("OK obs_comm_delta", d_meas, d_model)
+
+    def fresh_jaxpr(fn, *fargs):
+        jax.clear_caches()
+        return str(jax.make_jaxpr(fn)(*fargs))
+
+    mv = make_dist_matvec(dshape, mesh, "blk", comm="halo-plan")
+    parts, pargs = solve_parts["halo-plan"]
+    assert trace.enabled()
+    mv_on = fresh_jaxpr(mv, dd, x_dev)
+    sv_on = fresh_jaxpr(parts["fn"], *pargs, b_dev)
+    trace.set_enabled(False)
+    try:
+        mv_off = fresh_jaxpr(mv, dd, x_dev)
+        sv_off = fresh_jaxpr(parts["fn"], *pargs, b_dev)
+    finally:
+        trace.set_enabled(True)
+    assert mv_on == mv_off
+    print("OK obs_trace_neutral_matvec", len(mv_on))
+    assert sv_on == sv_off
+    print("OK obs_trace_neutral_solve", len(sv_on))
 
 
 if __name__ == "__main__":

@@ -20,7 +20,7 @@ def test_distributed_h2_8dev():
     proc = subprocess.run(
         [sys.executable, os.path.join(os.path.dirname(__file__),
                                       "dist_worker.py")],
-        capture_output=True, text=True, timeout=2400, env=env)
+        capture_output=True, text=True, timeout=3000, env=env)
     assert proc.returncode == 0, proc.stdout + proc.stderr
     out = proc.stdout
     markers = ["OK partition", "OK matvec_allgather", "OK matvec_ppermute",
@@ -32,6 +32,11 @@ def test_distributed_h2_8dev():
                "OK solver_jaxpr_callback_free",
                "OK frac_dist_jaxpr_callback_free",
                "OK mg_gathered",
+               "OK obs_comm_bytes_halo-plan", "OK obs_comm_bytes_ppermute",
+               "OK obs_comm_bytes_allgather",
+               "OK obs_solve_bytes_halo-plan",
+               "OK obs_solve_bytes_allgather", "OK obs_comm_delta",
+               "OK obs_trace_neutral_matvec", "OK obs_trace_neutral_solve",
                "ALL_OK"]
     for tag in ("uniform2d", "graded1d"):
         for p in (2, 8):

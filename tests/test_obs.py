@@ -1,0 +1,253 @@
+"""Observability layer (repro/obs) — trace neutrality + timer/metric units.
+
+The load-bearing guarantee: ``obs.trace.phase`` annotations are enabled by
+default on every hot path (matvec, halo, compression, solvers, fractional),
+so they MUST add zero operations to the traced programs — the jaxpr of an
+annotated function is byte-identical with tracing enabled and disabled,
+and stays callback-free.  (``IterationTimer`` is the sanctioned exception:
+it DOES add a callback and is therefore opt-in only — asserted here too.)
+
+Also covered: the replay timers' env threading, the wire-byte
+normalization factors, PhaseRecord's model join, the Chrome-trace export,
+and the per-phase comm-model decomposition summing exactly to
+``dist_solve_comm_bytes`` (the invariant ``profile_solve`` reports rely
+on).  Multi-device behavior (measured-vs-modeled collective bytes,
+dist-solve neutrality at p=8) lives in ``tests/dist_worker.py``.
+"""
+import json
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from jaxpr_utils import walk_primitives
+
+from repro.obs import trace
+from repro.obs.timers import (IterationTimer, Stage, interleaved_times,
+                              median_ratio, run_stages, time_fn,
+                              time_stages)
+
+
+@pytest.fixture(scope="module")
+def small_h2():
+    from repro.core.clustering import regular_grid_points
+    from repro.core.construction import construct_h2
+    from repro.core.kernels_fn import exponential_kernel
+
+    pts = regular_grid_points(16, 2)          # N = 256
+    return construct_h2(pts, exponential_kernel(0.1),
+                        leaf_size=16, cheb_p=4, eta=0.9)
+
+
+@pytest.fixture(autouse=True)
+def _tracing_restored():
+    yield
+    trace.set_enabled(True)
+
+
+def _jaxpr_str(fn, *args):
+    """Fresh jaxpr text: caches cleared so the trace actually re-runs
+    under the current enable flag instead of replaying a memoized trace."""
+    jax.clear_caches()
+    return str(jax.make_jaxpr(fn)(*args))
+
+
+# ---------------------------------------------------------------------------
+# trace neutrality: annotations on by default, zero ops in the jaxpr
+# ---------------------------------------------------------------------------
+
+def test_phase_annotations_are_jaxpr_neutral_matvec(small_h2):
+    from repro.core.matvec import h2_matvec
+
+    shape, data, _, _ = small_h2
+    x = jnp.ones((shape.n, 2), jnp.float32)
+    fn = lambda d, xx: h2_matvec(shape, d, xx)       # noqa: E731
+
+    assert trace.enabled()                # default ON — that's the point
+    j_on = _jaxpr_str(fn, data, x)
+    trace.set_enabled(False)
+    j_off = _jaxpr_str(fn, data, x)
+    assert j_on == j_off                  # byte-identical program
+
+    prims = walk_primitives(jax.make_jaxpr(fn)(data, x).jaxpr, [])
+    assert not any("callback" in p for p in prims), set(prims)
+
+
+def test_phase_annotations_are_jaxpr_neutral_pcg():
+    from repro.solvers import pcg
+
+    op = lambda x: 3.0 * x               # noqa: E731
+    b = jnp.ones((64,), jnp.float32)
+    fn = lambda bb: pcg(op, bb, tol=1e-6, maxiter=50)    # noqa: E731
+
+    j_on = _jaxpr_str(fn, b)
+    trace.set_enabled(False)
+    j_off = _jaxpr_str(fn, b)
+    assert j_on == j_off
+
+    prims = walk_primitives(jax.make_jaxpr(fn)(b).jaxpr, [])
+    assert any(p == "while" for p in prims)
+    assert not any("callback" in p for p in prims), set(prims)
+
+
+def test_phase_annotations_are_jaxpr_neutral_compression(small_h2):
+    from repro.core.compression import compression_weights
+
+    shape, data, _, _ = small_h2
+    fn = lambda d: compression_weights(shape, d)         # noqa: E731
+    j_on = _jaxpr_str(fn, data)
+    trace.set_enabled(False)
+    j_off = _jaxpr_str(fn, data)
+    assert j_on == j_off
+
+
+def test_phases_registered(small_h2):
+    from repro.core.matvec import h2_matvec
+
+    shape, data, _, _ = small_h2
+    x = jnp.ones((shape.n, 1), jnp.float32)
+    jax.clear_caches()
+    jax.make_jaxpr(lambda d, xx: h2_matvec(shape, d, xx))(data, x)
+    assert {"hgemv/upsweep", "hgemv/coupling-gemm", "hgemv/downsweep",
+            "hgemv/dense"} <= trace.PHASES_SEEN
+
+
+def test_disabled_phase_registers_nothing():
+    trace.set_enabled(False)
+    before = set(trace.PHASES_SEEN)
+    with trace.phase("obs-test/never-on"):
+        pass
+    assert "obs-test/never-on" not in trace.PHASES_SEEN
+    assert trace.PHASES_SEEN == before
+
+
+def test_iteration_timer_is_not_neutral():
+    """The coarse in-graph mode DOES add a callback — which is exactly why
+    it is opt-in and banned from the default path."""
+    timer = IterationTimer()
+    fn = timer.wrap(lambda x: x * 2.0)
+    prims = walk_primitives(jax.make_jaxpr(fn)(jnp.ones(4)).jaxpr, [])
+    assert any("callback" in p for p in prims), set(prims)
+
+
+# ---------------------------------------------------------------------------
+# timers
+# ---------------------------------------------------------------------------
+
+def test_time_fn_and_interleaved():
+    x = jnp.ones((128,), jnp.float32)
+    sec = time_fn(jnp.sin, x, reps=3)
+    assert sec > 0
+    acc = interleaved_times({"a": lambda: jnp.sin(x),
+                             "b": lambda: jnp.cos(x)}, reps=4)
+    assert sorted(acc) == ["a", "b"]
+    assert all(len(v) == 4 and min(v) > 0 for v in acc.values())
+    assert median_ratio([2.0, 4.0, 8.0], [1.0, 2.0, 4.0]) == 2.0
+
+
+def test_stage_pipeline_env_threading():
+    stages = [
+        Stage("double", jax.jit(lambda x: 2.0 * x), ("x",), ("y",)),
+        Stage("split", jax.jit(lambda y: (y + 1.0, y - 1.0)),
+              ("y",), ("hi", "lo"), phase="split-phase"),
+        Stage("sum", jax.jit(lambda a, b: a + b), ("hi", "lo"), ("z",)),
+    ]
+    env = run_stages(stages, {"x": jnp.full((8,), 3.0)})
+    np.testing.assert_allclose(np.asarray(env["z"]), 12.0)
+    assert set(env) == {"x", "y", "hi", "lo", "z"}
+
+    secs = time_stages(stages, env, reps=3)
+    assert sorted(secs) == ["double", "split", "sum"]
+    assert all(v > 0 for v in secs.values())
+    assert stages[1].phase == "split-phase"
+
+
+# ---------------------------------------------------------------------------
+# metrics + export
+# ---------------------------------------------------------------------------
+
+def test_wire_bytes_factors():
+    from repro.obs.metrics import wire_bytes
+
+    assert wire_bytes({"all-gather": 800.0}, 8) == 700.0
+    assert wire_bytes({"reduce-scatter": 800.0}, 8) == 700.0
+    assert wire_bytes({"all-reduce": 10.0}, 8) == 70.0
+    assert wire_bytes({"collective-permute": 64.0}, 8) == 64.0
+    assert wire_bytes({"all-gather": 800.0,
+                       "collective-permute": 100.0}, 8) == 800.0
+
+
+def test_phase_record_joins_models(tmp_path):
+    from repro.obs.metrics import phase_record, records_to_json
+
+    a = jnp.ones((16, 32), jnp.float32)
+    bmat = jnp.ones((32, 8), jnp.float32)
+    rec = phase_record("test/gemm", us=12.5,
+                       fn=jax.jit(lambda x, y: x @ y), args=(a, bmat),
+                       model_comm_bytes=0, p=1, comm="none")
+    assert rec.model_flops == 2 * 16 * 32 * 8
+    d = rec.to_dict()
+    assert d["comm"] == "none" and "extra" not in d
+    assert d["us"] == 12.5
+
+    path = tmp_path / "phases.json"
+    records_to_json([rec], str(path), bench="unit")
+    doc = json.loads(path.read_text())
+    assert doc["bench"] == "unit"
+    assert doc["phases"][0]["phase"] == "test/gemm"
+
+
+def test_chrome_trace_export(tmp_path):
+    from repro.obs.export import write_chrome_trace
+
+    path = tmp_path / "trace.json"
+    lanes = [{"lane": "halo-plan", "iters": 2,
+              "phase_us": {"a": 10.0, "b": 5.0}},
+             {"lane": "allgather", "iters": 1,
+              "phase_us": {"a": 12.0}}]
+    write_chrome_trace(str(path), lanes)
+    doc = json.loads(path.read_text())
+    ev = doc["traceEvents"]
+    names = [e["name"] for e in ev if e.get("ph") == "X"]
+    assert names.count("a") == 3 and names.count("b") == 2
+    assert all(e["dur"] > 0 for e in ev if e.get("ph") == "X")
+    tids = {e["tid"] for e in ev if e.get("ph") == "X"}
+    assert len(tids) == 2                 # one thread row per comm mode
+
+
+def test_phase_comm_model_sums_to_solve_model():
+    """The per-phase byte decomposition must sum EXACTLY to the whole-
+    iteration model — profile_solve's records are a partition of
+    ``dist_solve_comm_bytes``, not an independent estimate."""
+    from repro.apps.fractional import (FractionalProblem,
+                                       build_dist_problem,
+                                       dist_solve_comm_bytes)
+    from repro.obs.profile_solve import PHASE_ORDER, phase_comm_model
+
+    prob = FractionalProblem(16).build()
+    dshape, mg, _, _ = build_dist_problem(prob, p=8)
+    for comm in ("halo-plan", "ppermute", "allgather"):
+        model = phase_comm_model(dshape, mg, comm)
+        assert set(model) == set(PHASE_ORDER)
+        assert sum(model.values()) == dist_solve_comm_bytes(
+            dshape, mg, comm), comm
+        assert model["hgemv/exchange"] > 0
+
+
+def test_baseline_compare_warns_on_regression():
+    import sys
+    import os
+    sys.path.insert(0, os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..")))
+    from benchmarks.run import compare_to_baseline
+
+    base = [{"name": "x", "us": 100.0, "phases": {"a": 50.0, "b": 50.0}}]
+    ok = [{"name": "x", "us": 110.0, "phases": {"a": 55.0, "b": 55.0}}]
+    bad = [{"name": "x", "us": 130.0, "phases": {"a": 40.0, "b": 90.0}}]
+    unknown = [{"name": "y", "us": 9000.0}]
+    assert compare_to_baseline(ok, base) == []
+    warns = compare_to_baseline(bad, base)
+    assert len(warns) == 2                # us + phase b, not phase a
+    assert any("phase b" in w for w in warns)
+    assert compare_to_baseline(unknown, base) == []
