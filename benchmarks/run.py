@@ -25,23 +25,36 @@ import json
 import os
 import sys
 import traceback
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 MODULES = ["accuracy", "hgemv", "compression_bench", "construction_bench",
-           "dist_bench", "solver_bench", "fractional", "lm_step"]
+           "dist_bench", "solver_bench", "serve_bench", "fractional",
+           "lm_step"]
 
 #: per-record wall-time keys compared by ``compare_to_baseline``
-TIMING_KEYS = ("us", "us_per_solve", "us_per_iter")
+#: (p50/p99 are the serving-latency tripwires from BENCH_serve.json)
+TIMING_KEYS = ("us", "us_per_solve", "us_per_iter", "p50_ms", "p99_ms")
 
 
 def _record_key(r: Dict):
     return r.get("name") or (r.get("phase"), r.get("comm"))
 
 
-def load_baseline(path: str) -> List[Dict]:
+def load_baseline(path: str) -> Optional[List[Dict]]:
     """Load a baseline record list from a BENCH json — either a plain
     record list (``benchmarks.run`` output) or a ``profile_solve``
-    document (its ``phases`` records are compared by (phase, comm))."""
+    document (its ``phases`` records are compared by (phase, comm)).
+
+    A missing file returns ``None`` with a loud warning instead of
+    raising: a newly-registered module (e.g. serve) has no committed
+    baseline on its first run, and that must not abort — or silently
+    skip — the tripwire for every other module."""
+    if not os.path.exists(path):
+        print(f"# WARN baseline file {path!r} not found — baseline "
+              "comparison skipped (expected on a module's first run; "
+              "commit the fresh BENCH json to arm the tripwire)",
+              flush=True)
+        return None
     with open(path) as f:
         doc = json.load(f)
     if isinstance(doc, dict):
@@ -100,6 +113,7 @@ def main() -> None:
 
     rows: List[str] = []
     all_records: List[Dict] = []
+    module_records: Dict[str, List[Dict]] = {}
     print("name,us_per_call,derived")
     failed = []
     for name in mods:
@@ -115,6 +129,7 @@ def main() -> None:
                 print(r, flush=True)
             if records:
                 all_records += records
+                module_records[name] = records
                 stem = name[:-len("_bench")] if name.endswith("_bench") \
                     else name
                 os.makedirs(args.json_dir, exist_ok=True)
@@ -126,6 +141,16 @@ def main() -> None:
             failed.append(name)
             traceback.print_exc()
     if baseline is not None:
+        # a module none of whose fresh records match any baseline record
+        # has no tripwire coverage — say so loudly instead of silently
+        # reporting "no regressions" for it (new modules start this way)
+        base_keys = {_record_key(b) for b in baseline}
+        for name, recs in module_records.items():
+            if not any(_record_key(r) in base_keys for r in recs):
+                print(f"# WARN module {name!r}: none of its "
+                      f"{len(recs)} records have a baseline entry — "
+                      "regressions not checked (new module? commit its "
+                      "BENCH json to arm the tripwire)", flush=True)
         warns = compare_to_baseline(all_records, baseline)
         for w in warns:
             print(w, flush=True)

@@ -44,6 +44,41 @@ def chrome_trace_events(phase_us: Mapping[str, float], pid: int = 0,
     return events
 
 
+def write_span_trace(path: str, spans: Sequence[Dict],
+                     process: str = "repro.serving virtual time") -> None:
+    """Write explicitly-timestamped host-side spans as a Chrome trace.
+
+    Unlike ``write_chrome_trace`` (which *reconstructs* a timeline from
+    per-phase medians laid end-to-end), this exports spans that already
+    carry their own placement — e.g. the serve loop's virtual-time stage
+    spans (``{"name", "ts", "dur", "args"}`` with ts/dur in µs) — so queue
+    wait, solve, backoff, and degraded time land where they actually
+    happened.  Spans are binned into thread rows by name prefix (the part
+    before the last ``/``) so each request stage gets its own lane.
+    """
+    lanes_seen: List[str] = []
+    events: List[Dict] = [{"name": "process_name", "ph": "M", "pid": 0,
+                           "args": {"name": process}}]
+    for sp in spans:
+        lane = sp["name"].rsplit("/", 1)[0] if "/" in sp["name"] \
+            else sp["name"]
+        if lane not in lanes_seen:
+            lanes_seen.append(lane)
+            events.append({"name": "thread_name", "ph": "M", "pid": 0,
+                           "tid": lanes_seen.index(lane),
+                           "args": {"name": lane}})
+        ev = {"name": sp["name"], "ph": "X", "ts": round(float(sp["ts"]), 3),
+              "dur": round(float(sp["dur"]), 3), "pid": 0,
+              "tid": lanes_seen.index(lane),
+              "cat": sp["name"].split("/")[0]}
+        if sp.get("args"):
+            ev["args"] = dict(sp["args"])
+        events.append(ev)
+    with open(path, "w") as f:
+        json.dump({"traceEvents": events, "displayTimeUnit": "ms"}, f,
+                  indent=1)
+
+
 def write_chrome_trace(path: str, lanes: Sequence[Dict]) -> None:
     """Write a trace file from lane dicts:
     ``{"lane": str, "phase_us": {...}, "iters": int, "args": {...}}``.

@@ -20,6 +20,73 @@ class StepFailure(RuntimeError):
     """Raised when a step is lost (device failure / preemption)."""
 
 
+def backoff_delays(attempt: int, *, base: float = 0.05, factor: float = 2.0,
+                   cap: float = 2.0, jitter: float = 0.5,
+                   rng: Optional[np.random.Generator] = None) -> float:
+    """Exponential backoff with multiplicative jitter: delay before retry
+    ``attempt`` (0-based) is ``min(cap, base * factor**attempt)`` scaled by
+    a uniform factor in ``[1 - jitter, 1 + jitter]``.  Pass a seeded ``rng``
+    for deterministic drills (no rng -> no jitter, pure exponential)."""
+    d = min(cap, base * factor ** attempt)
+    if rng is not None and jitter > 0:
+        d *= 1.0 + jitter * (2.0 * float(rng.uniform()) - 1.0)
+    return d
+
+
+@dataclasses.dataclass
+class CircuitBreaker:
+    """Closed -> open -> half-open -> closed breaker (cloud resilience
+    pattern; DESIGN.md §9).  Single-threaded, driven by an external clock
+    so drills are deterministic in virtual time.
+
+    ``closed``: traffic flows; ``failure_threshold`` *consecutive* failures
+    trip it ``open`` (callers must degrade — the breaker only decides).
+    ``open``: primary path refused until ``cooldown`` elapses, after which
+    ``allow`` transitions to ``half-open`` and admits ONE probe.
+    ``half-open``: probe success re-closes; probe failure re-opens and
+    restarts the cooldown.
+    """
+    failure_threshold: int = 3
+    cooldown: float = 1.0
+    state: str = "closed"
+    consecutive_failures: int = 0
+    opened_at: float = 0.0
+    trips: int = 0
+    recoveries: int = 0
+    transitions: List[dict] = dataclasses.field(default_factory=list)
+
+    def _goto(self, state: str, now: float) -> None:
+        self.transitions.append({"t": now, "from": self.state, "to": state})
+        self.state = state
+
+    def allow(self, now: float) -> bool:
+        """May the primary path be tried at time ``now``?"""
+        if self.state == "closed":
+            return True
+        if self.state == "open":
+            if now - self.opened_at >= self.cooldown:
+                self._goto("half-open", now)
+                return True
+            return False
+        return True     # half-open: the single in-flight probe
+
+    def record_success(self, now: float) -> None:
+        if self.state == "half-open":
+            self.recoveries += 1
+            self._goto("closed", now)
+        self.consecutive_failures = 0
+
+    def record_failure(self, now: float) -> None:
+        self.consecutive_failures += 1
+        if self.state == "half-open" or (
+                self.state == "closed"
+                and self.consecutive_failures >= self.failure_threshold):
+            if self.state == "closed":
+                self.trips += 1
+            self._goto("open", now)
+            self.opened_at = now
+
+
 @dataclasses.dataclass
 class FailureInjector:
     """Deterministically injects failures at given steps (tests/drills)."""
@@ -96,17 +163,30 @@ def run_with_restarts(step_fn: Callable[[int], None], *, start_step: int,
     """Driver loop: run step_fn(step); on StepFailure, call on_restart()
     (which restores from the last checkpoint and returns the resume step).
 
-    Returns (steps_completed, restarts).
+    ``max_restarts`` bounds *consecutive* restarts without forward
+    progress: the budget resets whenever the run advances past the
+    furthest step previously completed, so a long run with sporadic
+    recoverable failures does not spuriously exhaust it — only a failure
+    loop that stops making progress raises.
+
+    Returns (steps_completed, restarts) with ``restarts`` the TOTAL
+    restart count over the run.
     """
     restarts = 0
+    budget_used = 0
     step = start_step
+    furthest = start_step
     while step < total_steps:
         try:
             step_fn(step)
             step += 1
+            if step > furthest:
+                furthest = step
+                budget_used = 0      # forward progress resets the budget
         except StepFailure:
             restarts += 1
-            if restarts > max_restarts:
+            budget_used += 1
+            if budget_used > max_restarts:
                 raise
             step = on_restart(step) if on_restart else step
     return step, restarts

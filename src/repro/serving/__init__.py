@@ -1,0 +1,20 @@
+"""Fault-tolerant H^2 solver service (DESIGN.md §9): operator cache with
+LRU + byte-budget eviction and single-flight fill, bounded-queue admission
+with backpressure, continuous multi-RHS batching over segmented
+``block_cg``, and a fault layer (deterministic injection, retry with
+backoff + jitter, straggler hedging, circuit breaker with degraded modes)
+built on ``repro.runtime.fault``."""
+from repro.serving.batching import (Completion, PanelState, QueueFull,
+                                    RequestQueue, SolveRequest)
+from repro.serving.cache import (CacheEntry, OperatorCache, OperatorKey,
+                                 geometry_digest)
+from repro.serving.loadgen import PoissonLoad
+from repro.serving.service import (ServeReport, ServiceFaultPlan,
+                                   SolverService, default_make_apply)
+
+__all__ = [
+    "OperatorCache", "OperatorKey", "CacheEntry", "geometry_digest",
+    "RequestQueue", "QueueFull", "SolveRequest", "Completion", "PanelState",
+    "PoissonLoad", "SolverService", "ServiceFaultPlan", "ServeReport",
+    "default_make_apply",
+]

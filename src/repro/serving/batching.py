@@ -1,0 +1,160 @@
+"""Admission control + continuous RHS batching (DESIGN.md §9).
+
+Requests carry one right-hand side each; the service solves them through
+PR 5's multi-RHS ``block_cg``, whose per-column convergence masking makes a
+*panel* the natural scheduling unit: a fixed-width ``[n, panel_width]``
+block where each column is an independent CG recurrence.  Continuous
+batching runs the panel in fixed-length segments (``restart_every``
+iterations per dispatch, warm-started with ``x0``); at every segment
+boundary converged columns retire and queued requests take over the freed
+slots.  Empty slots are zero columns — ``block_cg``'s ``b = 0 -> converged
+at iteration 0`` semantics means padding is masked off from the first
+iteration and costs no convergence work.  The panel width is static, so
+the whole serve loop runs ONE jitted segment program per operator — no
+retrace as occupancy fluctuates.
+
+Admission is a bounded FIFO with backpressure (load-leveling pattern): a
+full queue rejects with a ``retry_after`` hint instead of queueing
+unboundedly, and expired requests are dropped at the boundary rather than
+wasting solver iterations.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class SolveRequest:
+    """One RHS to solve against a cached operator."""
+    rid: int
+    b: np.ndarray                       # [n] right-hand side (tree order)
+    arrival: float                      # virtual arrival time (s)
+    deadline: float = math.inf          # absolute virtual time
+    tol: float = 1e-6
+    attempts: int = 0                   # client resubmissions so far
+
+    def expired(self, now: float) -> bool:
+        return now >= self.deadline
+
+
+@dataclasses.dataclass
+class Completion:
+    """Terminal record of a request (served, expired, or rejected)."""
+    rid: int
+    status: str                         # "ok" | "timeout" | "rejected"
+    arrival: float
+    finished: float
+    x: Optional[np.ndarray] = None
+    iters: int = 0
+    relres: float = math.nan
+
+    @property
+    def latency(self) -> float:
+        return self.finished - self.arrival
+
+
+class QueueFull(RuntimeError):
+    """Backpressure signal: retry after ``retry_after`` seconds."""
+
+    def __init__(self, retry_after: float):
+        super().__init__(f"queue full, retry after {retry_after:.3f}s")
+        self.retry_after = retry_after
+
+
+class RequestQueue:
+    """Bounded FIFO admission queue.
+
+    ``offer`` raises ``QueueFull`` (with a retry-after hint proportional to
+    the current backlog drain estimate) when at capacity; ``take`` pops up
+    to ``k`` unexpired requests and returns expired ones separately so the
+    caller can record timeouts.
+    """
+
+    def __init__(self, capacity: int, drain_hint: float = 0.05):
+        self.capacity = int(capacity)
+        self.drain_hint = float(drain_hint)   # est. seconds per queued req
+        self._q: Deque[SolveRequest] = deque()
+        self.rejected = 0
+        self.admitted = 0
+        self.peak_depth = 0
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def offer(self, req: SolveRequest) -> None:
+        if len(self._q) >= self.capacity:
+            self.rejected += 1
+            raise QueueFull(retry_after=max(self.drain_hint,
+                                            len(self._q) * self.drain_hint))
+        self._q.append(req)
+        self.admitted += 1
+        self.peak_depth = max(self.peak_depth, len(self._q))
+
+    def take(self, k: int, now: float
+             ) -> (List[SolveRequest], List[SolveRequest]):
+        """Pop up to ``k`` live requests; also drain+return expired ones."""
+        live: List[SolveRequest] = []
+        dead: List[SolveRequest] = []
+        while self._q and len(live) < k:
+            req = self._q.popleft()
+            (dead if req.expired(now) else live).append(req)
+        return live, dead
+
+
+@dataclasses.dataclass
+class PanelState:
+    """Host-side state of the in-flight multi-RHS panel.
+
+    ``reqs[j]`` is the request occupying column ``j`` (None = free slot);
+    ``b``/``x`` are the ``[n, width]`` RHS and current iterate (zeros in
+    free slots); ``iters[j]`` accumulates across segments.
+    """
+    n: int
+    width: int
+    dtype: np.dtype = np.dtype(np.float32)
+    reqs: List[Optional[SolveRequest]] = dataclasses.field(
+        default_factory=list)
+    b: np.ndarray = dataclasses.field(default=None)
+    x: np.ndarray = dataclasses.field(default=None)
+    iters: np.ndarray = dataclasses.field(default=None)
+
+    def __post_init__(self):
+        self.reqs = [None] * self.width
+        self.b = np.zeros((self.n, self.width), self.dtype)
+        self.x = np.zeros((self.n, self.width), self.dtype)
+        self.iters = np.zeros((self.width,), np.int64)
+
+    @property
+    def occupancy(self) -> int:
+        return sum(r is not None for r in self.reqs)
+
+    def free_slots(self) -> List[int]:
+        return [j for j, r in enumerate(self.reqs) if r is None]
+
+    def admit(self, reqs: List[SolveRequest]) -> None:
+        """Place requests into free slots (late arrivals join here — the
+        restart-boundary admission of continuous batching)."""
+        slots = self.free_slots()
+        assert len(reqs) <= len(slots), (len(reqs), len(slots))
+        for j, req in zip(slots, reqs):
+            self.reqs[j] = req
+            self.b[:, j] = req.b
+            self.x[:, j] = 0.0
+            self.iters[j] = 0
+
+    def evict(self, j: int) -> SolveRequest:
+        req = self.reqs[j]
+        self.reqs[j] = None
+        self.b[:, j] = 0.0
+        self.x[:, j] = 0.0
+        self.iters[j] = 0
+        return req
+
+    def tightest_tol(self, default: float) -> float:
+        tols = [r.tol for r in self.reqs if r is not None]
+        return min(tols) if tols else default

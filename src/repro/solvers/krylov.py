@@ -145,20 +145,28 @@ def pcg(apply_a: Callable, b: jax.Array,
 
 def block_cg(apply_a: Callable, b: jax.Array,
              precond: Optional[Callable] = None, tol: float = 1e-8,
-             maxiter: int = 200, axis=None) -> SolveResult:
+             maxiter: int = 200, x0: Optional[jax.Array] = None,
+             axis=None) -> SolveResult:
     """Batched multi-RHS CG: ``b`` is ``[n, nv]``, ``apply_a`` maps
     ``[n, nv] -> [n, nv]`` (the H^2 matvec's native multi-vector form).
 
     Each column runs an independent CG recurrence (per-column alpha/beta),
     all fused into one program so the nv matvecs share every dispatch.
     Converged columns are frozen via masking; ``iters`` is per-column.
+
+    ``x0`` warm-starts every column (zero-initialized columns behave
+    exactly as before); already-converged columns take zero iterations —
+    this is the restart-boundary hook the serving layer's continuous
+    batching uses to let late-arriving RHS join a panel mid-flight
+    (DESIGN.md §9).  ``tol`` may be a traced scalar so one jitted segment
+    program serves requests at different tolerances without retracing.
     """
     TRACE_COUNTS["block_cg"] += 1
     m = precond if precond is not None else _identity
     b_norm = jnp.sqrt(_cdot(b, b, axis))                   # [nv]
     bn_safe = jnp.where(b_norm > 0, b_norm, 1.0)
-    x = jnp.zeros_like(b)
-    r = b
+    x = jnp.zeros_like(b) if x0 is None else x0
+    r = b - apply_a(x) if x0 is not None else b
     z = m(r)
     p = z
     rz = _cdot(r, z, axis)

@@ -42,12 +42,17 @@ class TestServeSolver:
     def test_serving_loop_converges(self):
         mod = load_example("serve_h2_solver")
         r1, r2, rb = mod.main(side=16, leaf_size=16, tol=1e-5)
-        assert bool(r1.converged) and bool(r2.converged)
-        assert bool(rb.converged)
+        # single-RHS requests served to tolerance on both operators
+        assert r1.status == "ok" and r1.relres <= 1e-5
+        assert r2.status == "ok" and r2.relres <= 1e-5
         # recompression must not change the served solution materially
         drift = float(np.linalg.norm(np.asarray(r1.x) - np.asarray(r2.x))
                       / np.linalg.norm(np.asarray(r1.x)))
         assert drift < 1e-2, drift
-        # block solve served every RHS
-        assert np.asarray(rb.iters).shape == (8,)
-        assert float(np.max(np.asarray(rb.relres))) <= 1e-5 * 1.01
+        # the continuous-batching panel served every Poisson request
+        assert rb.metrics["completed"] == 8
+        assert all(rb.completions[i].status == "ok" for i in range(8))
+        assert max(rb.completions[i].relres for i in range(8)) <= 1e-5
+        # the stream hit the operator (and compiled solver) in the cache
+        assert rb.metrics["cache"]["hits"] >= 1
+        assert rb.metrics["cache"]["misses"] == 2

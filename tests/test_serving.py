@@ -1,0 +1,403 @@
+"""`repro.serving` tests: operator cache (LRU/byte-budget/single-flight),
+admission queue backpressure, continuous-batching panel mechanics, and the
+deterministic fault drill the CI acceptance criterion specifies — under
+injected device-loss, NaN-divergence, and straggler faults at fixed seeds
+the service completes every request with solutions matching a fault-free
+run, and the circuit breaker trips and recovers (half-open -> closed).
+
+The drill uses a fixed virtual ``dispatch_cost`` so the event loop's clock
+— and therefore batch formation, fault placement, breaker timing — is a
+pure function of the seeds.  The solves themselves are the real jitted
+``block_cg`` segments over a real H^2 operator.
+"""
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from repro.runtime.fault import CircuitBreaker, StragglerMonitor
+from repro.serving import (OperatorCache, OperatorKey, PanelState,
+                           PoissonLoad, QueueFull, RequestQueue,
+                           ServiceFaultPlan, SolveRequest, SolverService,
+                           geometry_digest)
+
+
+# ---------------------------------------------------------------------------
+# cache
+
+class FakeShape:
+    """Stand-in with the H2Shape memory accounting the cache uses."""
+
+    def __init__(self, scalars, n=64):
+        self._scalars = scalars
+        self.n = n
+
+    def memory_lowrank(self):
+        return self._scalars
+
+    def memory_dense(self):
+        return 0
+
+
+def _key(tag, tol=None):
+    return OperatorKey(geometry=tag, kernel=("exp", 0.1), tol=tol)
+
+
+def _build(scalars):
+    return lambda: (FakeShape(scalars), {"v": np.zeros(scalars)}, {})
+
+
+class TestOperatorCache:
+    def test_cache_aside_hit_and_miss(self):
+        cache = OperatorCache(max_bytes=1 << 20)
+        e1 = cache.get_or_build(_key("a"), _build(100))
+        e2 = cache.get_or_build(_key("a"), _build(100))
+        assert e1 is e2
+        assert cache.stats()["misses"] == 1
+        assert cache.stats()["hits"] == 1
+        assert e1.nbytes == 400         # scalars * f32
+
+    def test_lru_byte_budget_eviction(self):
+        cache = OperatorCache(max_bytes=1000)      # 250 f32 scalars
+        cache.get_or_build(_key("a"), _build(100))
+        cache.get_or_build(_key("b"), _build(100))
+        cache.get_or_build(_key("a"), _build(100))  # touch a -> b is LRU
+        cache.get_or_build(_key("c"), _build(100))  # 1200 bytes: evict b
+        assert _key("a") in cache and _key("c") in cache
+        assert _key("b") not in cache
+        assert cache.stats()["evictions"] == 1
+        # rebuilding the evicted key is a miss again
+        cache.get_or_build(_key("b"), _build(100))
+        assert cache.stats()["misses"] == 4
+
+    def test_max_entries_budget(self):
+        cache = OperatorCache(max_bytes=1 << 30, max_entries=2)
+        for tag in "abc":
+            cache.get_or_build(_key(tag), _build(10))
+        assert len(cache) == 2
+        assert _key("a") not in cache
+
+    def test_oversize_entry_admitted_alone(self):
+        cache = OperatorCache(max_bytes=100)
+        cache.get_or_build(_key("small"), _build(10))
+        cache.get_or_build(_key("huge"), _build(10_000))
+        assert _key("huge") in cache    # service cannot run without it
+        assert _key("small") not in cache
+        assert len(cache) == 1
+
+    def test_single_flight_concurrent_misses_build_once(self):
+        cache = OperatorCache()
+        builds = []
+        gate = threading.Event()
+
+        def build():
+            gate.wait(5.0)
+            builds.append(1)
+            return FakeShape(10), {}, {}
+
+        entries = [None] * 8
+
+        def worker(i):
+            entries[i] = cache.get_or_build(_key("shared"), build)
+
+        threads = [threading.Thread(target=worker, args=(i,))
+                   for i in range(8)]
+        for t in threads:
+            t.start()
+        gate.set()
+        for t in threads:
+            t.join(10.0)
+        assert len(builds) == 1         # exactly one construction
+        assert all(e is entries[0] for e in entries)
+
+    def test_builder_failure_releases_single_flight(self):
+        cache = OperatorCache()
+
+        def bad():
+            raise RuntimeError("construction failed")
+
+        with pytest.raises(RuntimeError):
+            cache.get_or_build(_key("x"), bad)
+        # the key is not wedged: a later build succeeds
+        e = cache.get_or_build(_key("x"), _build(10))
+        assert e.nbytes == 40
+
+    def test_lookup_loosest_degraded_candidate(self):
+        cache = OperatorCache()
+        cache.get_or_build(_key("g", tol=None), _build(100))
+        cache.get_or_build(_key("g", tol=1e-5), _build(80))
+        cache.get_or_build(_key("g", tol=1e-3), _build(40))
+        hit = cache.lookup_loosest(_key("g", tol=1e-5), max_tol=1e-2)
+        assert hit is not None and hit.key.tol == 1e-3
+        # nothing loose enough below the ceiling
+        assert cache.lookup_loosest(_key("g", tol=1e-5),
+                                    max_tol=1e-6) is None
+        # different geometry never matches
+        assert cache.lookup_loosest(_key("other", tol=1e-5),
+                                    max_tol=1e-2) is None
+
+
+# ---------------------------------------------------------------------------
+# admission + panel
+
+class TestRequestQueue:
+    def test_backpressure_rejects_with_retry_after(self):
+        q = RequestQueue(capacity=2, drain_hint=0.1)
+        r = lambda i: SolveRequest(rid=i, b=np.zeros(4), arrival=0.0)
+        q.offer(r(0))
+        q.offer(r(1))
+        with pytest.raises(QueueFull) as ei:
+            q.offer(r(2))
+        assert ei.value.retry_after >= 0.1
+        assert q.rejected == 1 and q.admitted == 2
+
+    def test_take_drains_expired_separately(self):
+        q = RequestQueue(capacity=8)
+        live = SolveRequest(rid=0, b=np.zeros(4), arrival=0.0,
+                            deadline=10.0)
+        dead = SolveRequest(rid=1, b=np.zeros(4), arrival=0.0,
+                            deadline=0.5)
+        q.offer(dead)
+        q.offer(live)
+        got, expired = q.take(4, now=1.0)
+        assert [r.rid for r in got] == [0]
+        assert [r.rid for r in expired] == [1]
+        assert len(q) == 0
+
+
+class TestPanelState:
+    def test_admit_evict_roundtrip(self):
+        panel = PanelState(n=4, width=3)
+        reqs = [SolveRequest(rid=i, b=np.full(4, float(i + 1), np.float32),
+                             arrival=0.0) for i in range(2)]
+        panel.admit(reqs)
+        assert panel.occupancy == 2 and panel.free_slots() == [2]
+        assert np.all(panel.b[:, 0] == 1.0) and np.all(panel.b[:, 1] == 2.0)
+        assert np.all(panel.b[:, 2] == 0.0)     # free slot stays zero
+        out = panel.evict(0)
+        assert out.rid == 0
+        assert panel.occupancy == 1 and np.all(panel.b[:, 0] == 0.0)
+        # freed slot is reusable by a late arrival
+        panel.admit([SolveRequest(rid=9, b=np.full(4, 9.0, np.float32),
+                                  arrival=1.0)])
+        assert panel.reqs[0].rid == 9
+
+    def test_tightest_tol(self):
+        panel = PanelState(n=4, width=3)
+        panel.admit([SolveRequest(rid=0, b=np.zeros(4, np.float32),
+                                  arrival=0.0, tol=1e-4),
+                     SolveRequest(rid=1, b=np.zeros(4, np.float32),
+                                  arrival=0.0, tol=1e-7)])
+        assert panel.tightest_tol(1e-6) == 1e-7
+        assert PanelState(n=4, width=2).tightest_tol(1e-6) == 1e-6
+
+
+# ---------------------------------------------------------------------------
+# the service against a real operator
+
+@pytest.fixture(scope="module")
+def operator():
+    from repro.core.clustering import regular_grid_points
+    from repro.core.construction import construct_h2
+    from repro.core.kernels_fn import exponential_kernel
+
+    pts = regular_grid_points(16, 2)
+    key = OperatorKey(geometry=geometry_digest(pts),
+                      kernel=("exponential", 0.1), tol=None)
+
+    def build():
+        shape, data, _, _ = construct_h2(pts, exponential_kernel(0.1),
+                                         leaf_size=16, cheb_p=4, eta=0.9)
+        return shape, data, {}
+    return pts, key, build
+
+
+def _drill_service(fault_plan=None, **kw):
+    defaults = dict(panel_width=4, restart_every=20, max_segments=20,
+                    queue_capacity=16, tol=1e-6, dispatch_cost=0.02,
+                    detect_delay=0.005, seed=0,
+                    breaker=CircuitBreaker(failure_threshold=2,
+                                           cooldown=0.1),
+                    straggler=StragglerMonitor(threshold=3.0, warmup=2))
+    defaults.update(kw)
+    return SolverService(OperatorCache(), fault_plan=fault_plan,
+                         **defaults)
+
+
+def _load(n_requests=16, rate=100.0, seed=3):
+    return PoissonLoad(n=256, rate=rate, n_requests=n_requests, tol=1e-6,
+                       seed=seed)
+
+
+class TestServeLoop:
+    def test_fault_free_serves_all_to_tolerance(self, operator):
+        _, key, build = operator
+        rep = _drill_service().serve(_load().requests(), key, build)
+        m = rep.metrics
+        assert m["completed"] == 16 and m["timeouts"] == 0
+        assert all(c.status == "ok" for c in rep.completions.values())
+        assert max(c.relres for c in rep.completions.values()) <= 1e-6
+        assert m["breaker_trips"] == 0 and m["retries"] == 0
+
+    def test_continuous_batching_coalesces(self, operator):
+        """More requests than dispatches: concurrent RHS share segment
+        dispatches instead of being served one solve each."""
+        _, key, build = operator
+        rep = _drill_service().serve(
+            _load(n_requests=16, rate=1000.0).requests(), key, build)
+        m = rep.metrics
+        assert m["completed"] == 16
+        assert m["mean_occupancy"] > 1.5
+        # 16 solo solves would need >= 16 dispatches even at 1 segment
+        assert m["dispatches"] < 16
+
+    def test_deterministic_fault_drill(self, operator):
+        """The CI acceptance drill (ISSUE 7): device-loss + straggler
+        injection at fixed seeds; every request completes with the
+        fault-free solution; the breaker trips AND recovers."""
+        _, key, build = operator
+        baseline = _drill_service().serve(_load().requests(), key, build)
+
+        plan = ServiceFaultPlan(
+            device_loss_at={1: "xla: device lost", 2: "xla: device lost",
+                            9: "preempted"},
+            nan_at={6},
+            straggle_at={4: 0.5})
+        rep = _drill_service(fault_plan=plan).serve(_load().requests(),
+                                                    key, build)
+        m = rep.metrics
+        # every request completed, none expired (no deadlines set)
+        assert m["completed"] == 16 and m["timeouts"] == 0
+        assert all(c.status == "ok" for c in rep.completions.values())
+        # correctness vs the fault-free run (same seeds -> same requests)
+        for rid, c0 in baseline.completions.items():
+            c1 = rep.completions[rid]
+            diff = np.linalg.norm(c1.x - c0.x) / np.linalg.norm(c0.x)
+            assert diff < 1e-3, (rid, diff)
+        # the fault machinery actually engaged
+        assert m["dispatch_failures"] >= 3
+        assert m["retries"] >= 1
+        assert m["degraded_dispatches"] >= 1    # open-breaker traffic
+        assert m["hedges"] >= 1                 # straggler triggered one
+        # breaker tripped and recovered: ... open -> half-open -> closed
+        assert m["breaker_trips"] >= 1
+        assert m["breaker_recoveries"] >= 1
+        hops = [(t["from"], t["to"]) for t in m["breaker_transitions"]]
+        assert ("closed", "open") in hops
+        assert ("open", "half-open") in hops
+        assert ("half-open", "closed") in hops
+
+    def test_drill_is_reproducible(self, operator):
+        """Same seeds + same plan -> identical counters and transitions."""
+        _, key, build = operator
+        plan = {"device_loss_at": {1: "dl", 2: "dl"}, "nan_at": {6},
+                "straggle_at": {4: 0.5}}
+        reps = [_drill_service(fault_plan=ServiceFaultPlan(**plan)).serve(
+            _load().requests(), key, build) for _ in range(2)]
+        m0, m1 = (r.metrics for r in reps)
+        for k in ("completed", "dispatches", "dispatch_failures", "retries",
+                  "hedges", "degraded_dispatches", "breaker_trips",
+                  "breaker_recoveries", "timeouts"):
+            assert m0[k] == m1[k], k
+        assert [t["t"] for t in m0["breaker_transitions"]] == \
+            [t["t"] for t in m1["breaker_transitions"]]
+
+    def test_nan_divergence_is_retried(self, operator):
+        _, key, build = operator
+        plan = ServiceFaultPlan(nan_at={0})
+        rep = _drill_service(fault_plan=plan).serve(
+            _load(n_requests=4).requests(), key, build)
+        m = rep.metrics
+        assert m["completed"] == 4
+        assert m["dispatch_failures"] == 1 and m["retries"] == 1
+        assert all(np.isfinite(c.x).all()
+                   for c in rep.completions.values())
+
+    def test_deadline_expiry_counts_timeouts(self, operator):
+        _, key, build = operator
+        reqs = _load(n_requests=6).requests()
+        for r in reqs[3:]:
+            r.deadline = r.arrival + 1e-4      # cannot possibly be met
+        rep = _drill_service().serve(reqs, key, build)
+        m = rep.metrics
+        assert m["completed"] == 3 and m["timeouts"] == 3
+        statuses = {c.rid: c.status for c in rep.completions.values()}
+        assert sorted(rid for rid, s in statuses.items()
+                      if s == "timeout") == [3, 4, 5]
+
+    def test_backpressure_resubmits_and_rejects(self, operator):
+        _, key, build = operator
+        svc = _drill_service(queue_capacity=2, max_resubmits=1,
+                             dispatch_cost=0.5)
+        rep = svc.serve(_load(n_requests=12, rate=1000.0).requests(),
+                        key, build)
+        m = rep.metrics
+        assert m["queue_rejections"] > 0
+        assert m["resubmits"] > 0
+        assert m["rejected"] > 0                # some exhausted resubmits
+        assert m["completed"] + m["rejected"] + m["timeouts"] == 12
+
+    def test_degraded_loose_operator_path(self, operator):
+        """With degraded="loose" and a looser-tol operator resident, an
+        open breaker serves from it instead of single-RHS pcg."""
+        pts, key, build = operator
+        from repro.core.compression import compress
+
+        def build_loose():
+            shape, data, extra = build()
+            cshape, cdata = compress(shape, data, tol=1e-4)
+            return cshape, cdata, extra
+
+        cache = OperatorCache()
+        cache.get_or_build(key.loosened(1e-4), build_loose)
+        svc = SolverService(
+            cache, panel_width=4, restart_every=20, max_segments=20,
+            tol=1e-5, dispatch_cost=0.02, seed=0, degraded="loose",
+            degraded_tol=1e-3,
+            breaker=CircuitBreaker(failure_threshold=1, cooldown=10.0),
+            fault_plan=ServiceFaultPlan(device_loss_at={
+                i: "dl" for i in range(0, 8)}))
+        load = PoissonLoad(n=256, rate=100.0, n_requests=4, tol=1e-5,
+                           seed=3)
+        rep = svc.serve(load.requests(), key, build)
+        m = rep.metrics
+        assert m["breaker_trips"] >= 1
+        assert m["degraded_dispatches"] >= 1
+        assert m["completed"] == 4
+        # served from the loose operator: solutions are approximate but
+        # finite and close (the operator was compressed at 1e-4)
+        for c in rep.completions.values():
+            assert c.status == "ok" and np.isfinite(c.x).all()
+
+    def test_span_trace_export(self, operator, tmp_path):
+        from repro.obs.export import write_span_trace
+        _, key, build = operator
+        rep = _drill_service().serve(_load(n_requests=4).requests(),
+                                     key, build)
+        assert any(s["name"] == "serve/dispatch" for s in rep.spans)
+        path = tmp_path / "serve_trace.json"
+        write_span_trace(str(path), rep.spans)
+        doc = json.loads(path.read_text())
+        evs = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+        assert evs and all("ts" in e and "dur" in e for e in evs)
+        assert {e["name"] for e in evs} >= {"serve/operator",
+                                            "serve/dispatch"}
+
+    def test_cache_shared_across_services(self, operator):
+        """Two service instances over one cache: the second never builds
+        (the amortization story the subsystem exists for)."""
+        _, key, build = operator
+        cache = OperatorCache()
+        svc1 = SolverService(cache, panel_width=4, dispatch_cost=0.02,
+                             seed=0)
+        svc1.serve(_load(n_requests=2).requests(), key, build)
+        svc2 = SolverService(cache, panel_width=4, dispatch_cost=0.02,
+                             seed=0)
+
+        def must_not_build():
+            raise AssertionError("second service rebuilt a cached operator")
+        rep = svc2.serve(_load(n_requests=2).requests(), key,
+                         must_not_build)
+        assert rep.metrics["completed"] == 2
+        assert cache.stats()["misses"] == 1

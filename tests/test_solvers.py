@@ -143,6 +143,49 @@ class TestBlockCG:
             hj = hj[~np.isnan(hj)]
             assert float(hj[int(res.iters[j])]) <= 1e-6 * 1.01
 
+    @hyp(n=(8, 24), seed=(0, 10**6))
+    def test_warm_start_segments_match_cold_solve(self, n, seed):
+        """Running block_cg in warm-started segments (the serving layer's
+        restart-boundary continuation) reaches the same tolerance as one
+        cold solve, and already-converged columns take zero iterations."""
+        a = random_spd(n, seed)
+        B = jnp.asarray(
+            np.random.default_rng(seed + 5).standard_normal((n, 3)),
+            jnp.float32)
+        cold = block_cg(lambda x: a @ x, B, tol=1e-6, maxiter=8 * n)
+        seg = 3
+        x = jnp.zeros_like(B)
+        total = np.zeros(3, np.int64)
+        for _ in range(8 * n // seg + 2):
+            r = block_cg(lambda x_: a @ x_, B, tol=1e-6, maxiter=seg, x0=x)
+            x = r.x
+            total += np.asarray(r.iters)
+            if bool(r.converged):
+                break
+        assert bool(r.converged)
+        err = np.linalg.norm(np.asarray(x - cold.x)) \
+            / np.linalg.norm(np.asarray(cold.x))
+        assert err < 1e-4, err
+        # a further warm-started segment is a no-op: 0 iterations/column
+        r2 = block_cg(lambda x_: a @ x_, B, tol=1e-6, maxiter=seg, x0=x)
+        assert np.asarray(r2.iters).tolist() == [0, 0, 0]
+        assert bool(r2.converged)
+
+    def test_zero_padding_columns_converge_instantly(self):
+        """b = 0 columns (the panel's free slots) are masked off at
+        iteration 0 even when live columns run — the invariant the
+        continuous-batching panel relies on."""
+        a = random_spd(12, 7)
+        B = np.zeros((12, 4), np.float32)
+        B[:, 1] = np.random.default_rng(1).standard_normal(12)
+        res = block_cg(lambda x: a @ x, jnp.asarray(B), tol=1e-8,
+                       maxiter=64)
+        assert bool(res.converged)
+        iters = np.asarray(res.iters)
+        assert iters[0] == iters[2] == iters[3] == 0
+        assert iters[1] > 0
+        assert np.all(np.asarray(res.x)[:, [0, 2, 3]] == 0)
+
 
 class TestToleranceSemantics:
     """tol is uniformly relative to ||b|| (the old apps.fractional.pcg
