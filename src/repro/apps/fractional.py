@@ -25,8 +25,9 @@ paper's §6.4 end-to-end workload with zero per-iteration host sync.
 from __future__ import annotations
 
 import dataclasses
+import time
 import warnings
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -42,12 +43,19 @@ from repro.core.dist import (DistH2Data, DistH2Shape, dist_h2_matvec_local,
 from repro.core.kernels_fn import (diffusivity_2d, fractional_kernel_2d,
                                    fractional_kernel_2d_positive)
 from repro.core.matvec import h2_matvec
+from repro.core.repartition import repartition_h2
 from repro.core.structure import H2Data, H2Shape
+from repro.checkpoint.manager import CheckpointManager
 from repro.obs.trace import phase
+from repro.runtime.chaos import ChaosPlan, ChaosReport, FaultEvent
+from repro.runtime.fault import (StepFailure, StragglerMonitor,
+                                 run_with_restarts)
 from repro.solvers import (TRACE_COUNTS, build_grid_mg, mg_halo_bytes,
-                           mg_precond_local, mg_specs, result_specs)
+                           mg_precond_local, mg_specs, pcg_init, pcg_segment,
+                           pcg_state_specs, result_specs)
 from repro.solvers import gmres as _gmres
 from repro.solvers import pcg as _pcg
+from repro.solvers.krylov import _norm as _vec_norm
 from repro.solvers.mg import _apply_op as _mg_apply_op
 
 
@@ -238,7 +246,7 @@ def solve(n: int, beta: float = 0.75, tol: float = 1e-8,
 # ----------------------------------------------------------------------
 
 def build_dist_problem(prob: Dict, p: int, n_cycles: int = 2, nu: int = 3,
-                       omega: float = 0.7):
+                       omega: float = 0.7, dist_source=None):
     """Partition the fractional operator for ``p`` block rows.
 
     Returns ``(dshape, mg, args, specs)`` where ``args = (ddata, aux,
@@ -247,9 +255,17 @@ def build_dist_problem(prob: Dict, p: int, n_cycles: int = 2, nu: int = 3,
     transposition maps (sharded in row strips like the solver state); the
     operator's local part ``D + gamma*C`` reuses the V-cycle's level-0
     stencil arrays (``mg._apply_op``) instead of shipping a second copy.
+
+    ``dist_source``: optional ``(dshape_old, ddata_old)`` of an existing
+    partition — the elastic remesh path re-shards it via
+    ``core.repartition.repartition_h2`` instead of partitioning the
+    single-device operator afresh (DESIGN.md §10).
     """
     n = prob["n"]
-    dshape, ddata = partition_h2(prob["shape"], prob["data"], p)
+    if dist_source is not None:
+        dshape, ddata = repartition_h2(dist_source[0], dist_source[1], p)
+    else:
+        dshape, ddata = partition_h2(prob["shape"], prob["data"], p)
     mg, mga = build_grid_mg(prob["kappa"], prob["d_diag"].reshape(n, n),
                             prob["gamma"], prob["h"], n, p=p,
                             nu=nu, omega=omega, n_cycles=n_cycles)
@@ -367,6 +383,251 @@ def solve_distributed(n: int, mesh: Mesh, axis="blk", beta: float = 0.75,
             "relres": float(res.relres), "converged": bool(res.converged),
             "history": np.asarray(res.res_history), "prob": prob,
             "parts": parts, "placed_args": args, "b": b_dev}
+
+
+# ----------------------------------------------------------------------
+# elastic fault-tolerant solve (DESIGN.md §10): segmented PCG with
+# checkpointed state, shrink-remesh recovery, and a residual tripwire
+# ----------------------------------------------------------------------
+
+def make_dist_solve_segment(prob: Dict, mesh: Mesh, axis="blk",
+                            comm: str = "halo-plan", tol: float = 1e-8,
+                            steps: int = 10, maxiter: int = 200,
+                            use_precond: bool = True, n_cycles: int = 2,
+                            nu: int = 3, omega: float = 0.7,
+                            dist_source=None) -> Dict:
+    """Segmented (checkpointable) variant of ``make_dist_solve``.
+
+    Instead of one monolithic solve program this returns the three jitted
+    ``shard_map`` programs of the elastic solve — ``init(args, b) ->
+    PCGState``, ``segment(args, b, state) -> PCGState`` (at most ``steps``
+    iterations, the periodic-exit checkpoint boundary) and
+    ``residual(args, b, state) -> (true_relres, rec_relres)`` (the
+    recomputed ``||b - A x|| / ||b||`` silent-corruption tripwire) — all
+    driving the exact ``solvers.pcg`` recurrence, so total iteration
+    counts match the monolithic solve.  ``dist_source`` re-shards an
+    existing partition via ``repartition_h2`` (the post-device-loss
+    path).
+    """
+    p = mesh.shape[axis]
+    n, h = prob["n"], prob["h"]
+    dshape, mg, args, spec_tree = build_dist_problem(
+        prob, p, n_cycles=n_cycles, nu=nu, omega=omega,
+        dist_source=dist_source)
+    specs = spec_tree(axis)
+    sspecs = pcg_state_specs(P(axis))
+
+    def _ops(d, aux, mga):
+        def apply_a(x):
+            return _dist_apply_a(dshape, d, aux, mg, mga, x, axis, comm,
+                                 n, h)
+
+        pre = (lambda r: mg_precond_local(mg, mga, r, axis)) \
+            if use_precond else None
+        return apply_a, pre
+
+    def init_local(d, aux, mga, b):
+        apply_a, pre = _ops(d, aux, mga)
+        return pcg_init(apply_a, b, pre, axis=axis)
+
+    def seg_local(d, aux, mga, b, state):
+        apply_a, pre = _ops(d, aux, mga)
+        return pcg_segment(apply_a, b, state, pre, tol=tol, steps=steps,
+                           maxiter=maxiter, axis=axis)
+
+    def res_local(d, aux, mga, b, state):
+        apply_a, _ = _ops(d, aux, mga)
+        bn = _vec_norm(b, axis)
+        bn_safe = jnp.where(bn > 0, bn, 1.0)
+        true = _vec_norm(b - apply_a(state.x), axis)
+        return true / bn_safe, state.res / bn_safe
+
+    init = jax.jit(shard_map(init_local, mesh=mesh,
+                             in_specs=(*specs, P(axis)),
+                             out_specs=sspecs, check_vma=False))
+    segment = jax.jit(shard_map(seg_local, mesh=mesh,
+                                in_specs=(*specs, P(axis), sspecs),
+                                out_specs=sspecs, check_vma=False))
+    residual = jax.jit(shard_map(res_local, mesh=mesh,
+                                 in_specs=(*specs, P(axis), sspecs),
+                                 out_specs=(P(), P()), check_vma=False))
+
+    def place(tree, tree_specs=specs):
+        return jax.tree.map(
+            lambda a, s: jax.device_put(a, NamedSharding(mesh, s)),
+            tree, tree_specs)
+
+    def place_state(state):
+        return jax.tree.map(
+            lambda a, s: jax.device_put(a, NamedSharding(mesh, s)),
+            state, sspecs)
+
+    return {"init": init, "segment": segment, "residual": residual,
+            "args": args, "specs": specs, "state_specs": sspecs,
+            "dshape": dshape, "mg": mg, "place": place,
+            "place_state": place_state, "axis": axis}
+
+
+def solve_distributed_elastic(n: int, mesh: Mesh, axis="blk",
+                              beta: float = 0.75, tol: float = 1e-8,
+                              h2_tol: float = 1e-6, maxiter: int = 200,
+                              comm: str = "halo-plan",
+                              use_precond: bool = True,
+                              construction: str = "cheb",
+                              ckpt_dir: Optional[str] = None,
+                              ckpt_every: int = 10, max_restarts: int = 5,
+                              chaos: Optional[ChaosPlan] = None,
+                              monitor: Optional[StragglerMonitor] = None,
+                              ckpt_block: bool = True) -> Dict:
+    """Fault-tolerant distributed fractional solve (DESIGN.md §10).
+
+    The solve runs as segments of ``ckpt_every`` PCG iterations.  After
+    each segment the host snapshots the :class:`PCGState` through
+    ``CheckpointManager`` (when ``ckpt_dir`` is given) and probes the
+    recomputed true residual against the recurrence residual — a
+    divergence or non-finite value means silent state corruption, raised
+    as ``StepFailure`` *without* committing the poisoned state.  Recovery
+    is orchestrated by ``runtime.fault.run_with_restarts``: on a device
+    loss the operator is re-sharded onto the scheduled surviving mesh via
+    ``repartition_h2`` (fresh ``HaloPlan``s from ``partition_h2``'s own
+    plan construction), the latest *valid* checkpoint is restored and
+    re-placed under the new sharding, and the solve resumes from that
+    segment; corrupted state rolls back the same way on the unchanged
+    mesh.  Stragglers (injected via ``chaos`` or real) are flagged by the
+    ``StragglerMonitor`` but cost no iterations.
+
+    ``chaos`` takes a deterministic :class:`runtime.chaos.ChaosPlan`; the
+    returned dict carries the resulting :class:`ChaosReport` under
+    ``"report"`` (fault events, recovery cost, checkpoint overhead).
+    """
+    prob = FractionalProblem(n, beta=beta, h2_tol=h2_tol,
+                             construction=construction).build()
+    b_host = jnp.ones((n * n,), jnp.float32) * prob["h"] ** 2
+    b_norm = float(jnp.linalg.norm(b_host))
+    bn_safe = b_norm if b_norm > 0 else 1.0
+    plan = chaos if chaos is not None else ChaosPlan.empty()
+    report = ChaosReport()
+    mon = monitor if monitor is not None else StragglerMonitor()
+    mgr = CheckpointManager(ckpt_dir, keep=3) if ckpt_dir else None
+
+    ctx: Dict = {}
+
+    def build_ctx(mesh_cur, dist_source=None):
+        parts = make_dist_solve_segment(
+            prob, mesh_cur, axis, comm=comm, tol=tol, steps=ckpt_every,
+            maxiter=maxiter, use_precond=use_precond,
+            dist_source=dist_source)
+        ctx["parts"] = parts
+        ctx["mesh"] = mesh_cur
+        ctx["p"] = int(mesh_cur.shape[axis])
+        ctx["args"] = parts["place"](parts["args"])
+        ctx["b"] = jax.device_put(b_host,
+                                  NamedSharding(mesh_cur, P(axis)))
+
+    build_ctx(mesh)
+    state = ctx["parts"]["init"](*ctx["args"], ctx["b"])
+    total_segments = -(-int(maxiter) // int(ckpt_every))
+    flags = {"converged": False}
+    pending: Dict = {}
+    history: List[float] = []
+
+    def step_fn(seg):
+        nonlocal state
+        if flags["converged"]:
+            return
+        p_lost = plan.device_loss(seg)
+        if p_lost is not None:
+            pending.update(kind="device-loss", segment=seg, p_to=p_lost,
+                           k_done=int(jax.device_get(state.k)),
+                           t0=time.perf_counter())
+            raise StepFailure(f"device lost at segment {seg} "
+                              f"(p {ctx['p']} -> {p_lost})")
+        t0 = time.perf_counter()
+        new_state = ctx["parts"]["segment"](*ctx["args"], ctx["b"], state)
+        jax.block_until_ready(new_state.x)
+        wall = time.perf_counter() - t0
+        if plan.corrupts(seg):
+            # in-flight memory corruption: poison the fresh iterate
+            # AFTER the recurrence computed it — invisible to the
+            # recurrence residual, visible to the recomputed one
+            new_state = dataclasses.replace(
+                new_state, x=new_state.x * jnp.float32(jnp.nan))
+        true_rr, rec_rr = ctx["parts"]["residual"](*ctx["args"], ctx["b"],
+                                                   new_state)
+        true_rr, rec_rr = float(true_rr), float(rec_rr)
+        wall += plan.straggle(seg)
+        report.seg_wall_s.append(wall)
+        report.segments_run += 1
+        if mon.record(seg, wall):
+            report.straggler_flags.append(seg)
+            report.events.append(FaultEvent(
+                kind="straggler", segment=seg, p_from=ctx["p"],
+                p_to=ctx["p"], iters_lost=0, recover_s=0.0))
+        if not np.isfinite(true_rr) or true_rr > 10.0 * rec_rr + 1e-5:
+            pending.update(kind="corruption", segment=seg, p_to=ctx["p"],
+                           k_done=int(jax.device_get(new_state.k)),
+                           t0=time.perf_counter())
+            raise StepFailure(
+                f"residual tripwire at segment {seg}: true relres "
+                f"{true_rr:.3e} vs recurrence {rec_rr:.3e}")
+        state = new_state
+        history.append(rec_rr)
+        if mgr is not None:
+            t0 = time.perf_counter()
+            mgr.save(seg + 1, state,
+                     extra={"p": ctx["p"], "tol": tol, "comm": comm,
+                            "n": n, "iters": int(jax.device_get(state.k))},
+                     block=ckpt_block)
+            report.ckpt_save_s.append(time.perf_counter() - t0)
+        if float(jax.device_get(state.res)) <= tol * b_norm:
+            flags["converged"] = True
+
+    def on_restart(at):
+        nonlocal state
+        kind = pending.get("kind", "unknown")
+        p_from = ctx["p"]
+        if kind == "device-loss":
+            p_new = pending["p_to"]
+            devs = np.asarray(ctx["mesh"].devices).ravel()[:p_new]
+            # the block-row partition is pure reorganization, so the
+            # surviving operator re-shards losslessly onto the shrunk
+            # mesh — fresh HaloPlans via partition_h2's plan construction
+            src = (ctx["parts"]["dshape"], ctx["args"][0])
+            build_ctx(Mesh(devs, (axis,)), dist_source=src)
+        if mgr is not None:
+            mgr.wait()
+        restored = mgr.latest_step() if mgr is not None else None
+        if restored is not None:
+            shardings = jax.tree.map(
+                lambda s: NamedSharding(ctx["mesh"], s),
+                ctx["parts"]["state_specs"])
+            state, man = mgr.restore(state, shardings=shardings)
+            resume = int(man["step"])
+        else:
+            state = ctx["parts"]["init"](*ctx["args"], ctx["b"])
+            resume = 0
+        k_res = int(jax.device_get(state.k))
+        report.events.append(FaultEvent(
+            kind=kind, segment=pending.get("segment", at), p_from=p_from,
+            p_to=ctx["p"], iters_lost=max(0, pending.get("k_done", 0) - k_res),
+            recover_s=time.perf_counter() - pending.get("t0",
+                                                        time.perf_counter())))
+        pending.clear()
+        return resume
+
+    _, restarts = run_with_restarts(
+        step_fn, start_step=0, total_steps=total_segments,
+        max_restarts=max_restarts, on_restart=on_restart)
+    if mgr is not None:
+        mgr.wait()
+    report.restarts = restarts
+    res = float(jax.device_get(state.res))
+    return {"u": np.asarray(jax.device_get(state.x)).reshape(n, n),
+            "iters": int(jax.device_get(state.k)),
+            "relres": res / bn_safe,
+            "converged": res <= tol * b_norm,
+            "history": history, "prob": prob, "p_final": ctx["p"],
+            "report": report, "parts": ctx["parts"], "restarts": restarts}
 
 
 def dist_solve_comm_bytes(dshape: DistH2Shape, mg, comm: str = "halo-plan",

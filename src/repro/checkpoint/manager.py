@@ -100,32 +100,61 @@ class CheckpointManager:
                           ignore_errors=True)
 
     # --------------------------------------------------------------- restore
-    def list_steps(self):
+    def list_steps(self, complete_only: bool = False):
         out = []
         for name in os.listdir(self.directory):
             if name.startswith("step_") and not name.endswith(".tmp"):
                 out.append(int(name.split("_")[1]))
+        if complete_only:
+            out = [s for s in out if self.is_complete(s)]
         return sorted(out)
 
-    def latest_step(self) -> Optional[int]:
+    def is_complete(self, step: int) -> bool:
+        """True iff the checkpoint can actually be restored: the manifest
+        parses and every leaf file it indexes exists.  A crash between
+        the atomic rename and a torn write elsewhere (or a truncated copy
+        of the directory) leaves a partial step — restore must skip it,
+        not raise."""
+        d = os.path.join(self.directory, f"step_{step:08d}")
+        try:
+            with open(os.path.join(d, "manifest.json")) as f:
+                manifest = json.load(f)
+            n = int(manifest["n_leaves"])
+        except (OSError, ValueError, KeyError, TypeError):
+            return False
+        return all(os.path.exists(os.path.join(d, f"leaf_{i}.npy"))
+                   for i in range(n))
+
+    def latest_step(self, complete_only: bool = True) -> Optional[int]:
+        """Newest restorable step: the LATEST pointer if it names a
+        complete checkpoint, else the newest complete step on disk
+        (``complete_only=False`` restores the old purely-structural
+        scan)."""
+        candidates = []
         ptr = os.path.join(self.directory, "LATEST")
         if os.path.exists(ptr):
             with open(ptr) as f:
                 name = f.read().strip()
-            path = os.path.join(self.directory, name)
-            if os.path.exists(path):
-                return int(name.split("_")[1])
-        steps = self.list_steps()
-        return steps[-1] if steps else None
+            if os.path.exists(os.path.join(self.directory, name)):
+                candidates.append(int(name.split("_")[1]))
+        candidates += sorted(self.list_steps(), reverse=True)
+        for s in candidates:
+            if not complete_only or self.is_complete(s):
+                return s
+        return None
 
     def restore(self, tree_like: Any, step: Optional[int] = None,
                 shardings: Any = None) -> Any:
         """Restore into the structure of ``tree_like``; if ``shardings`` is
         given (pytree of NamedSharding) the leaves are placed with it —
-        this is the elastic path (new mesh, new device count)."""
+        this is the elastic path (new mesh, new device count).
+
+        With ``step=None`` the newest COMPLETE checkpoint is used —
+        a truncated/partial step (torn manifest, missing leaf file) falls
+        back to the previous complete one instead of raising."""
         step = step if step is not None else self.latest_step()
         if step is None:
-            raise FileNotFoundError("no checkpoint found")
+            raise FileNotFoundError("no complete checkpoint found")
         d = os.path.join(self.directory, f"step_{step:08d}")
         with open(os.path.join(d, "manifest.json")) as f:
             manifest = json.load(f)

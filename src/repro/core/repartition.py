@@ -1,0 +1,141 @@
+"""Elastic re-sharding of a distributed H^2 operator (DESIGN.md §10).
+
+When a device is lost mid-solve the surviving shards still hold every
+block of the operator — the block-row partition is a pure reorganization
+of the single-device ``H2Data``, so recovery is "invert the partition,
+partition again onto the shrunk mesh":
+
+    ``unpartition_h2``: ``(DistH2Shape, DistH2Data) -> (H2Shape, H2Data)``
+    ``repartition_h2``: ``unpartition_h2`` then ``partition_h2`` at ``p'``
+
+``repartition_h2`` therefore *reuses* ``partition_h2``'s plan
+construction wholesale — per-level ``HaloPlan``s, marshaled slot
+layouts, offsets/caps and the comm model for the new device count all
+come out of the same code path as a fresh partition, and the result is
+bit-identical to ``partition_h2(shape, data, p')`` on the original
+operator (the parity tests in ``tests/dist_worker.py`` assert this).
+
+The inversion leans on two invariants of ``partition_level``:
+
+  * the per-device slab ``[p * nbmax, k, k]`` stores each device's blocks
+    as a prefix (``fill`` counts up from 0) in the original list order,
+    and the original lists are (row, col)-sorted with block-row ownership
+    monotone in the row index — so concatenating the device prefixes
+    reproduces the global (row, col)-sorted block list exactly;
+  * the padded slot maps carry an explicit sentinel (``nbmax`` for the
+    branch levels' ``pb_blk``, ``dense_count`` for the dense halo plan's
+    ``diag_blk``/``off_blk``, of which every real block occupies exactly
+    one slot), so the per-device valid-prefix lengths are recoverable
+    from the data itself — no side channel.
+
+Top levels, transfer matrices, and leaf bases are replicated verbatim by
+``partition_h2`` and come back verbatim.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from .dist import DistH2Data, DistH2Shape, partition_h2
+from .structure import (H2Data, H2Shape, build_coupling_plan, remarshal,
+                        shape_of)
+
+
+def _slab_lists(sv: np.ndarray, sr: np.ndarray, sc: np.ndarray,
+                counts: np.ndarray, p: int, nloc: int, stride: int
+                ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Concatenate per-device slab prefixes back into the global
+    (row, col)-sorted block list: local rows are rebased to global node
+    indices (``+ d * nloc``); columns are already global."""
+    rows, cols, vals = [], [], []
+    for d in range(p):
+        sl = slice(d * stride, d * stride + int(counts[d]))
+        rows.append(sr[sl].astype(np.int64) + d * nloc)
+        cols.append(sc[sl].astype(np.int64))
+        vals.append(sv[sl])
+    return (np.concatenate(rows).astype(np.int32),
+            np.concatenate(cols).astype(np.int32),
+            np.concatenate(vals, axis=0))
+
+
+def unpartition_h2(dshape: DistH2Shape, ddata: DistH2Data
+                   ) -> Tuple[H2Shape, H2Data]:
+    """Invert ``partition_h2``: gather the sharded operator back into a
+    single-device ``H2Data`` (host-side; all shards must be addressable).
+
+    The returned data is fully usable — block lists, ``CouplingPlan`` and
+    marshaled buffers are rebuilt, and the ``H2Shape`` is recovered via
+    ``shape_of`` — so it can drive a single-device matvec directly or be
+    re-partitioned onto any valid device count.
+    """
+    p, lc, depth = dshape.p, dshape.lc, dshape.depth
+
+    e, f = [], []
+    for l in range(depth + 1):
+        src = (ddata.e_top, ddata.f_top) if l <= lc else \
+            (ddata.e_br, ddata.f_br)
+        i = l if l <= lc else l - lc
+        e.append(np.asarray(src[0][i]))
+        f.append(np.asarray(src[1][i]))
+
+    s, s_rows, s_cols = [], [], []
+    for l in range(lc):
+        s.append(np.asarray(ddata.s_top[l]))
+        s_rows.append(np.asarray(ddata.s_top_rows[l]))
+        s_cols.append(np.asarray(ddata.s_top_cols[l]))
+    for l in range(lc, depth + 1):
+        i = l - lc
+        nbmax = dshape.br_counts[i]
+        pb = np.asarray(ddata.pb_blk[i]).reshape(p, -1)
+        counts = (pb != nbmax).sum(axis=1)
+        r, c, v = _slab_lists(np.asarray(ddata.s_br[i]),
+                              np.asarray(ddata.s_br_rows[i]),
+                              np.asarray(ddata.s_br_cols[i]),
+                              counts, p, dshape.nodes_local(l), nbmax)
+        s.append(v)
+        s_rows.append(r)
+        s_cols.append(c)
+
+    nbd = dshape.dense_count
+    counts_d = (np.asarray(ddata.hp_dense.diag_blk).reshape(p, -1)
+                != nbd).sum(axis=1)
+    off = np.asarray(ddata.hp_dense.off_blk)
+    if off.size:
+        counts_d = counts_d + (off.reshape(p, -1) != nbd).sum(axis=1)
+    d_rows, d_cols, dense = _slab_lists(
+        np.asarray(ddata.dense), np.asarray(ddata.d_rows),
+        np.asarray(ddata.d_cols), counts_d, p, dshape.leaves_per_dev, nbd)
+
+    plan = build_coupling_plan(depth, s_rows, s_cols, d_rows, d_cols)
+    data = H2Data(
+        u_leaf=jnp.asarray(np.asarray(ddata.u_leaf)),
+        v_leaf=jnp.asarray(np.asarray(ddata.v_leaf)),
+        e=[jnp.asarray(x) for x in e],
+        f=[jnp.asarray(x) for x in f],
+        s=[jnp.asarray(x) for x in s],
+        s_rows=[jnp.asarray(x) for x in s_rows],
+        s_cols=[jnp.asarray(x) for x in s_cols],
+        dense=jnp.asarray(dense),
+        d_rows=jnp.asarray(d_rows), d_cols=jnp.asarray(d_cols),
+        plan=plan)
+    data = remarshal(data)
+    shape = shape_of(data, dshape.leaf_size, dshape.symmetric)
+    return shape, data
+
+
+def repartition_h2(dshape: DistH2Shape, ddata: DistH2Data, p_new: int
+                   ) -> Tuple[DistH2Shape, DistH2Data]:
+    """Re-shard a distributed operator onto ``p_new`` devices.
+
+    The shrink-remesh step of the elastic solve: on device loss the
+    orchestrator calls this with ``p_new = p / 2`` (any power of two with
+    ``log2(p_new) <= depth`` works, growth included) and gets back a
+    partition with freshly built ``HaloPlan``s, marshaled layouts, and
+    comm-model statics for the new mesh — all via ``partition_h2``, so
+    the remeshed operator is indistinguishable from one partitioned at
+    ``p_new`` from scratch.
+    """
+    shape, data = unpartition_h2(dshape, ddata)
+    return partition_h2(shape, data, p_new)

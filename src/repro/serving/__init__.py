@@ -10,11 +10,13 @@ from repro.serving.cache import (CacheEntry, OperatorCache, OperatorKey,
                                  geometry_digest)
 from repro.serving.loadgen import PoissonLoad
 from repro.serving.service import (ServeReport, ServiceFaultPlan,
-                                   SolverService, default_make_apply)
+                                   SolverService, ThreadedSolverService,
+                                   default_make_apply)
 
 __all__ = [
     "OperatorCache", "OperatorKey", "CacheEntry", "geometry_digest",
     "RequestQueue", "QueueFull", "SolveRequest", "Completion", "PanelState",
-    "PoissonLoad", "SolverService", "ServiceFaultPlan", "ServeReport",
+    "PoissonLoad", "SolverService", "ThreadedSolverService",
+    "ServiceFaultPlan", "ServeReport",
     "default_make_apply",
 ]

@@ -36,7 +36,9 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import itertools
 import math
+import threading
 import time
 from typing import Any, Callable, Dict, List, Optional, Set, Tuple
 
@@ -459,3 +461,130 @@ class SolverService:
         m["cache"] = self.cache.stats()
         return ServeReport(completions=completions, metrics=m,
                            spans=list(self.spans))
+
+
+class ThreadedSolverService:
+    """Real-thread front-end over the same cache/panel/segment machinery.
+
+    Where ``SolverService.serve`` replays a pre-known request list on a
+    virtual clock, this runs live: ``submit(b)`` may be called from any
+    number of threads (backpressure surfaces as ``QueueFull``, exactly as
+    in the virtual loop) while a single solver thread drains the
+    admission queue into the continuous-batched panel and runs the same
+    jitted ``block_cg`` segments — late arrivals join at the next restart
+    boundary.  ``result(rid)`` blocks on a per-request event; every
+    request completes exactly once (``metrics["duplicates"]`` counts
+    would-be double publishes and must stay 0 — the concurrency smoke
+    test asserts it).
+
+    The panel and completions map are owned by the solver thread; the
+    lock only guards the queue and the completion/event maps, so the
+    jitted segment runs lock-free.
+    """
+
+    def __init__(self, service: SolverService, key: OperatorKey,
+                 build_fn: Callable[[], Tuple[Any, Any, Dict]],
+                 poll: float = 0.002):
+        self.service = service
+        self.entry = service.operator(key, build_fn)
+        self._seg = service._segment_fn(self.entry, service.restart_every)
+        self._queue = RequestQueue(service.queue_capacity,
+                                   drain_hint=service.queue_drain_hint)
+        self._panel = PanelState(n=self.entry.shape.n,
+                                 width=service.panel_width)
+        self._poll = float(poll)
+        self._lock = threading.Lock()
+        self._work = threading.Event()
+        self._stop = False
+        self._completions: Dict[int, Completion] = {}
+        self._done: Dict[int, threading.Event] = {}
+        self._rids = itertools.count()
+        self.metrics: Dict[str, int] = {
+            "submitted": 0, "completed": 0, "timeouts": 0,
+            "dispatches": 0, "duplicates": 0}
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    # -- submitter side --------------------------------------------------
+    def submit(self, b, tol: Optional[float] = None,
+               deadline: float = math.inf) -> int:
+        """Enqueue one RHS; returns its rid.  Raises ``QueueFull`` when
+        the admission queue is at capacity (callers back off and retry —
+        the same contract as the virtual loop's resubmit path)."""
+        rid = next(self._rids)
+        req = SolveRequest(rid=rid, b=np.asarray(b, np.float32),
+                           arrival=time.monotonic(), deadline=deadline,
+                           tol=self.service.tol if tol is None else
+                           float(tol))
+        with self._lock:
+            self._queue.offer(req)          # may raise QueueFull
+            self._done[rid] = threading.Event()
+            self.metrics["submitted"] += 1
+        self._work.set()
+        return rid
+
+    def result(self, rid: int, timeout: Optional[float] = None
+               ) -> Completion:
+        with self._lock:
+            evt = self._done[rid]
+        if not evt.wait(timeout):
+            raise TimeoutError(f"request {rid} not completed")
+        with self._lock:
+            return self._completions[rid]
+
+    def close(self, timeout: Optional[float] = None) -> None:
+        """Drain outstanding work, then stop the solver thread."""
+        self._stop = True
+        self._work.set()
+        self._thread.join(timeout)
+
+    # -- solver thread ---------------------------------------------------
+    def _publish(self, req: SolveRequest, status: str, x: np.ndarray,
+                 iters: int, relres: float) -> None:
+        c = Completion(req.rid, status, req.arrival, time.monotonic(),
+                       x=x, iters=iters, relres=relres)
+        with self._lock:
+            if req.rid in self._completions:
+                self.metrics["duplicates"] += 1
+                return
+            self._completions[req.rid] = c
+            self.metrics["completed"] += 1
+            self._done[req.rid].set()
+
+    def _run(self) -> None:
+        svc = self.service
+        panel = self._panel
+        max_total_iters = svc.restart_every * svc.max_segments
+        while True:
+            with self._lock:
+                free = panel.free_slots()
+                live, dead = (self._queue.take(len(free), time.monotonic())
+                              if free else ([], []))
+                queued = len(self._queue)
+            for d in dead:
+                self.metrics["timeouts"] += 1
+                self._publish(d, "timeout", None, 0, math.nan)
+            if live:
+                panel.admit(live)
+            if panel.occupancy == 0:
+                if self._stop and queued == 0:
+                    return
+                self._work.wait(self._poll)
+                self._work.clear()
+                continue
+            with phase("serve/solve"):
+                res = self._seg(self.entry.data, panel.b, panel.x,
+                                panel.tightest_tol(svc.tol))
+            self.metrics["dispatches"] += 1
+            panel.x = np.array(res.x)
+            panel.iters += np.asarray(res.iters, np.int64)
+            relres = np.asarray(res.relres, np.float64)
+            for j, req in enumerate(panel.reqs):
+                if req is None:
+                    continue
+                ok = relres[j] <= req.tol
+                if ok or panel.iters[j] >= max_total_iters:
+                    self._publish(req, "ok" if ok else "failed",
+                                  panel.x[:, j].copy(),
+                                  int(panel.iters[j]), float(relres[j]))
+                    panel.evict(j)

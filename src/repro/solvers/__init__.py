@@ -1,13 +1,18 @@
 """Krylov solver subsystem (DESIGN.md §7): fully-jitted single-device and
 ``shard_map``-distributed PCG / block-CG / restarted GMRES(m), plus the
 sharded geometric-multigrid V-cycle preconditioner."""
-from .krylov import SolveResult, TRACE_COUNTS, block_cg, gmres, pcg
+from .krylov import (PCGState, SolveResult, TRACE_COUNTS, block_cg, gmres,
+                     pcg, pcg_init, pcg_segment)
 from .mg import GridMG, MGArrays, build_grid_mg, mg_halo_bytes, \
     mg_precond_local, mg_specs
-from .distributed import krylov_comm_bytes, make_dist_krylov, result_specs
+from .distributed import (krylov_comm_bytes, make_dist_krylov,
+                          make_dist_krylov_segment, pcg_state_specs,
+                          result_specs)
 
 __all__ = [
     "SolveResult", "TRACE_COUNTS", "pcg", "block_cg", "gmres",
+    "PCGState", "pcg_init", "pcg_segment", "pcg_state_specs",
     "GridMG", "MGArrays", "build_grid_mg", "mg_precond_local", "mg_specs",
-    "mg_halo_bytes", "make_dist_krylov", "krylov_comm_bytes", "result_specs",
+    "mg_halo_bytes", "make_dist_krylov", "make_dist_krylov_segment",
+    "krylov_comm_bytes", "result_specs",
 ]

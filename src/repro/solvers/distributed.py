@@ -25,7 +25,8 @@ from repro.compat import shard_map
 from repro.core.dist import (DistH2Data, DistH2Shape, dist_h2_matvec_local,
                              dist_specs, matvec_comm_bytes)
 
-from .krylov import TRACE_COUNTS, SolveResult, block_cg, gmres, pcg
+from .krylov import (TRACE_COUNTS, PCGState, SolveResult, block_cg, gmres,
+                     pcg, pcg_init, pcg_segment, _norm)
 
 
 def result_specs(x_spec) -> SolveResult:
@@ -33,6 +34,71 @@ def result_specs(x_spec) -> SolveResult:
     ``b``; every psum-reduced scalar/history is replicated."""
     return SolveResult(x=x_spec, iters=P(), relres=P(), converged=P(),
                        res_history=P())
+
+
+def pcg_state_specs(x_spec) -> PCGState:
+    """PartitionSpec pytree for a PCGState: the vector carries (x, r, p)
+    are sharded like ``b``; the psum-reduced scalars are replicated."""
+    return PCGState(k=P(), x=x_spec, r=x_spec, p=x_spec, rz=P(), res=P())
+
+
+def make_dist_krylov_segment(dshape: DistH2Shape, mesh: Mesh, axis,
+                             comm: str = "halo-plan", shift: float = 0.0,
+                             tol: float = 1e-8, steps: int = 10,
+                             maxiter: int = 200, schedule: str = "auto",
+                             backend: str = "jnp"):
+    """Segmented (checkpointable) distributed PCG on ``(shift*I + A)``.
+
+    Returns the three jitted ``shard_map`` programs of the elastic solve
+    (DESIGN.md §10), each taking operator/vectors placed with
+    ``dist_specs(dshape, axis)`` / ``P(axis)`` shardings:
+
+      - ``init(d, b) -> PCGState``
+      - ``segment(d, b, state) -> PCGState`` — at most ``steps``
+        iterations, exiting early on convergence; drives the exact
+        :func:`repro.solvers.krylov.pcg` recurrence, so iteration counts
+        match the monolithic solve
+      - ``residual(d, b, state) -> (true_relres, rec_relres)`` — the
+        recomputed ``||b - (shift*I + A) x|| / ||b||`` next to the
+        recurrence residual, the silent-corruption tripwire
+
+    plus ``state_specs`` for placing a restored checkpoint.
+    """
+    specs = dist_specs(dshape, axis)
+    bspec = P(axis)
+    sspecs = pcg_state_specs(bspec)
+
+    def apply_a(d, x):
+        y = dist_h2_matvec_local(dshape, d, x[:, None], axis, comm,
+                                 backend, schedule)[:, 0]
+        return shift * x + y if shift else y
+
+    def init_local(d, b):
+        return pcg_init(lambda v: apply_a(d, v), b, axis=axis)
+
+    def seg_local(d, b, state):
+        return pcg_segment(lambda v: apply_a(d, v), b, state, tol=tol,
+                           steps=steps, maxiter=maxiter, axis=axis)
+
+    def res_local(d, b, state):
+        bn = _norm(b, axis)
+        bn_safe = jnp.where(bn > 0, bn, 1.0)
+        true = _norm(b - apply_a(d, state.x), axis)
+        return true / bn_safe, state.res / bn_safe
+
+    return {
+        "init": jax.jit(shard_map(init_local, mesh=mesh,
+                                  in_specs=(specs, bspec),
+                                  out_specs=sspecs, check_vma=False)),
+        "segment": jax.jit(shard_map(seg_local, mesh=mesh,
+                                     in_specs=(specs, bspec, sspecs),
+                                     out_specs=sspecs, check_vma=False)),
+        "residual": jax.jit(shard_map(res_local, mesh=mesh,
+                                      in_specs=(specs, bspec, sspecs),
+                                      out_specs=(P(), P()),
+                                      check_vma=False)),
+        "state_specs": sspecs,
+    }
 
 
 def make_dist_krylov(dshape: DistH2Shape, mesh: Mesh, axis,

@@ -39,7 +39,7 @@ from repro.obs.trace import phase
 # core/compression.TRACE_COUNTS)
 TRACE_COUNTS = {"pcg": 0, "block_cg": 0, "gmres": 0,
                 "dist_pcg": 0, "dist_block_cg": 0, "dist_gmres": 0,
-                "dist_fractional": 0}
+                "dist_fractional": 0, "pcg_segment": 0}
 
 
 @jax.tree_util.register_pytree_node_class
@@ -90,6 +90,103 @@ def _identity(r):
     return r
 
 
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PCGState:
+    """Resumable PCG carry at an iteration boundary (DESIGN.md §10).
+
+    Exactly the ``lax.while_loop`` carry of :func:`pcg` minus the residual
+    history: ``k`` iterations completed (int32), the iterate ``x``, residual
+    ``r``, search direction ``p``, the ``<r, z>`` scalar ``rz`` and the
+    absolute residual norm ``res``.  A solve driven as
+    ``pcg_init`` + repeated ``pcg_segment`` calls reproduces ``pcg``'s
+    iterates bit for bit — segmentation only moves the loop-exit test to a
+    periodic boundary, it does not change the recurrence — which is what
+    makes the state a valid checkpoint: persist it every segment, restore
+    it after a failure (possibly re-sharded onto a different mesh), and the
+    solve continues as if uninterrupted.
+    """
+    k: jax.Array
+    x: jax.Array
+    r: jax.Array
+    p: jax.Array
+    rz: jax.Array
+    res: jax.Array
+
+    def tree_flatten(self):
+        return ((self.k, self.x, self.r, self.p, self.rz, self.res), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, ch):
+        return cls(*ch)
+
+
+def _pcg_step(apply_a, m, axis, x, r, p, rz):
+    """One PCG iteration — the shared body of ``pcg`` and
+    ``pcg_segment`` (identical op order keeps the two bitwise-equal)."""
+    with phase("krylov/apply-A"):
+        ap = apply_a(p)
+    with phase("krylov/scalars"):
+        pap = _dot(p, ap, axis)
+        alpha = rz / jnp.where(pap != 0, pap, 1.0)
+        x = x + alpha * p
+        r = r - alpha * ap
+        res = _norm(r, axis)
+    with phase("krylov/precond"):
+        z = m(r)
+    with phase("krylov/scalars"):
+        rz_new = _dot(r, z, axis)
+        beta = rz_new / jnp.where(rz != 0, rz, 1.0)
+        p = z + beta * p
+    return x, r, p, rz_new, res
+
+
+def pcg_init(apply_a: Callable, b: jax.Array,
+             precond: Optional[Callable] = None,
+             x0: Optional[jax.Array] = None, axis=None) -> PCGState:
+    """Initial :class:`PCGState` for a segmented solve — the same prologue
+    as :func:`pcg` (``x0=None`` starts from ``r = b`` without an operator
+    application)."""
+    m = precond if precond is not None else _identity
+    x = jnp.zeros_like(b) if x0 is None else x0
+    r = b - apply_a(x) if x0 is not None else b
+    z = m(r)
+    return PCGState(k=jnp.int32(0), x=x, r=r, p=z,
+                    rz=_dot(r, z, axis), res=_norm(r, axis))
+
+
+def pcg_segment(apply_a: Callable, b: jax.Array, state: PCGState,
+                precond: Optional[Callable] = None, tol: float = 1e-8,
+                steps: int = 10, maxiter: int = 200,
+                axis=None) -> PCGState:
+    """Advance a PCG solve by at most ``steps`` iterations.
+
+    The periodic-exit restart boundary of the checkpointing scheme: the
+    ``while_loop`` runs the exact :func:`pcg` recurrence but additionally
+    exits after ``steps`` iterations, handing the carry back to the host
+    so the driver can snapshot it, probe the TRUE residual
+    ``||b - A x|| / ||b||`` against the recurrence residual (the
+    silent-corruption tripwire), or re-shard it onto a new mesh.  The
+    convergence test is unchanged (``res <= tol * ||b||`` ends the solve
+    regardless of segment position), so total iteration counts match the
+    monolithic ``pcg`` exactly.
+    """
+    TRACE_COUNTS["pcg_segment"] += 1
+    m = precond if precond is not None else _identity
+    b_norm = _norm(b, axis)
+    k_stop = jnp.minimum(state.k + jnp.int32(steps), jnp.int32(maxiter))
+
+    def cond(s):
+        return (s.k < k_stop) & (s.res > tol * b_norm)
+
+    def body(s):
+        x, r, p, rz_new, res = _pcg_step(apply_a, m, axis,
+                                         s.x, s.r, s.p, s.rz)
+        return PCGState(k=s.k + 1, x=x, r=r, p=p, rz=rz_new, res=res)
+
+    return jax.lax.while_loop(cond, body, state)
+
+
 def pcg(apply_a: Callable, b: jax.Array,
         precond: Optional[Callable] = None, tol: float = 1e-8,
         maxiter: int = 200, x0: Optional[jax.Array] = None,
@@ -119,20 +216,8 @@ def pcg(apply_a: Callable, b: jax.Array,
 
     def body(state):
         k, x, r, p, rz, _, hist = state
-        with phase("krylov/apply-A"):
-            ap = apply_a(p)
+        x, r, p, rz_new, res = _pcg_step(apply_a, m, axis, x, r, p, rz)
         with phase("krylov/scalars"):
-            pap = _dot(p, ap, axis)
-            alpha = rz / jnp.where(pap != 0, pap, 1.0)
-            x = x + alpha * p
-            r = r - alpha * ap
-            res = _norm(r, axis)
-        with phase("krylov/precond"):
-            z = m(r)
-        with phase("krylov/scalars"):
-            rz_new = _dot(r, z, axis)
-            beta = rz_new / jnp.where(rz != 0, rz, 1.0)
-            p = z + beta * p
             hist = hist.at[k + 1].set(res / bn_safe)
         return k + 1, x, r, p, rz_new, res, hist
 

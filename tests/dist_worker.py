@@ -22,6 +22,15 @@ partitioned HLO (perf.hlo_cost, wire-normalized by obs.metrics) must
 agree with the analytic comm models for every comm mode, and the
 always-on phase annotations must leave the distributed matvec and the
 fused solve jaxprs byte-identical when disabled.
+
+Elasticity (repro/core/repartition + repro/serving over distributed
+operators): shrink-remesh p=8 -> p' in {4, 2} bitwise-reproduces a fresh
+partition at p', and comm-mode-keyed cache entries serve identical
+solutions through real shard_map matvecs.
+
+Run with ``--chaos`` for the deterministic chaos drills instead
+(device-loss / NaN / straggler against the elastic fractional solve);
+the pytest wrapper for that mode is ``tests/test_chaos.py``.
 """
 import os
 
@@ -175,6 +184,9 @@ def main():
     assert err2 < 1e-5, err2
     print("OK matvec_2d_mesh", err2)
 
+    repartition_checks(rng, {"uniform2d": (shape, data),
+                             "graded1d": (shape1, data1)})
+    serving_dist_checks(mesh, shape, data, pts)
     solver_checks(rng, {"uniform2d": (shape, data),
                         "graded1d": (shape1, data1)})
     mg_gathered_check(rng)
@@ -185,6 +197,140 @@ def main():
 
 
 from jaxpr_utils import assert_callback_free as _assert_callback_free  # noqa: E402
+
+
+def repartition_checks(rng, geometries):
+    """Shrink-remesh (core/repartition.py): re-sharding a p=8 operator
+    onto p' in {4, 2} must reproduce a fresh ``partition_h2`` at p'
+    exactly — same shape, bitwise-equal arrays — so the elastic solve's
+    device-loss recovery computes with the identical operator it would
+    have built from scratch.  The comm model is then recomputed for p'
+    (fewer, fatter slabs move fewer total halo bytes)."""
+    from repro.core.repartition import repartition_h2, unpartition_h2
+
+    for tag, (shp, dat) in geometries.items():
+        dsp8, ddp8 = partition_h2(shp, dat, 8)
+        x = jnp.asarray(rng.standard_normal((shp.n, 4)), jnp.float32)
+        y_ref = np.asarray(h2_matvec(shp, dat, x))
+
+        # round trip: unpartition reproduces the single-device operator
+        shp_u, dat_u = unpartition_h2(dsp8, ddp8)
+        y_u = np.asarray(h2_matvec(shp_u, dat_u, x))
+        assert np.array_equal(y_u, y_ref)
+        print(f"OK unpartition_{tag}")
+
+        b8 = matvec_comm_bytes(dsp8, 4, "halo-plan")
+        for p_new in (4, 2):
+            dsp_n, ddp_n = repartition_h2(dsp8, ddp8, p_new)
+            dsp_f, ddp_f = partition_h2(shp, dat, p_new)
+            assert dsp_n == dsp_f, (tag, p_new)
+            jax.tree.map(
+                lambda a, b: np.testing.assert_array_equal(
+                    np.asarray(a), np.asarray(b)), ddp_n, ddp_f)
+
+            mesh_n = jax.make_mesh((p_new,), ("blk",))
+            dd_n = place(mesh_n, dsp_n, ddp_n)
+            x_n = jax.device_put(x, NamedSharding(mesh_n, P("blk", None)))
+            mv = make_dist_matvec(dsp_n, mesh_n, "blk", comm="halo-plan")
+            y_n = np.asarray(mv(dd_n, x_n))
+            err = np.linalg.norm(y_n - y_ref) / np.linalg.norm(y_ref)
+            assert err < 1e-5, (tag, p_new, err)
+
+            # comm model recomputed for the shrunk mesh: volume ordering
+            # holds at p', and the p' plan moves no more bytes than
+            # p=8's (equality is possible on the graded geometry, whose
+            # halo traffic concentrates in the near-origin slabs)
+            bn_hp = matvec_comm_bytes(dsp_n, 4, "halo-plan")
+            bn_ag = matvec_comm_bytes(dsp_n, 4, "allgather")
+            assert 0 < bn_hp < bn_ag, (tag, p_new, bn_hp, bn_ag)
+            assert bn_hp <= b8, (tag, p_new, bn_hp, b8)
+            print(f"OK repartition_{tag}_p8to{p_new}", err, bn_hp, bn_ag)
+
+
+def serving_dist_checks(mesh, shape, data, pts):
+    """Serving over *distributed* operators: the ``comm`` field of
+    ``OperatorKey`` keys distinct residents (a halo-plan operator and an
+    allgather one are different cache entries), each served through the
+    real jitted shard_map matvec at p=8, and all comm modes must return
+    the same solutions as the single-device ("local") operator."""
+    from repro.serving import (OperatorCache, OperatorKey, PoissonLoad,
+                               ServiceFaultPlan, SolverService,
+                               geometry_digest)
+
+    geom = geometry_digest(pts)
+    cache = OperatorCache()
+    n_req = 6
+
+    def load():
+        return PoissonLoad(n=shape.n, rate=200.0, n_requests=n_req,
+                           tol=1e-6, seed=11).requests()
+
+    def svc(make_apply, fault_plan=None):
+        return SolverService(cache, panel_width=4, restart_every=25,
+                             max_segments=20, tol=1e-6,
+                             dispatch_cost=0.02, seed=0,
+                             fault_plan=fault_plan,
+                             make_apply=make_apply)
+
+    sols = {}
+    for comm in ("local", "halo-plan", "allgather"):
+        key = OperatorKey(geometry=geom, kernel=("exponential", 0.1),
+                          tol=None, comm=comm)
+        if comm == "local":
+            def build():
+                return shape, data, {}
+
+            def make_apply(shp):
+                return lambda d, x: x + h2_matvec(shp, d, x)
+        else:
+            dsp, ddp = partition_h2(shape, data, 8)
+            mv = make_dist_matvec(dsp, mesh, "blk", comm=comm)
+
+            def build(dsp=dsp, ddp=ddp):
+                return shape, place(mesh, dsp, ddp), {"dshape": dsp}
+
+            def make_apply(shp, mv=mv):
+                return lambda d, x: x + mv(d, x)
+        rep = svc(make_apply).serve(load(), key, build)
+        assert rep.metrics["completed"] == n_req, (comm, rep.metrics)
+        assert all(c.status == "ok" for c in rep.completions.values())
+        sols[comm] = {rid: np.asarray(c.x)
+                      for rid, c in rep.completions.items()}
+
+    # distinct residents per comm mode...
+    assert len(cache) == 3 and cache.stats()["misses"] == 3, cache.stats()
+    # ...but identical answers (same system, different exchange plans)
+    for comm in ("halo-plan", "allgather"):
+        for rid, x_loc in sols["local"].items():
+            d = (np.linalg.norm(sols[comm][rid] - x_loc)
+                 / np.linalg.norm(x_loc))
+            assert d < 1e-4, (comm, rid, d)
+    print("OK serving_dist_cache", cache.stats()["misses"], len(cache))
+
+    # a served request list replayed against the cached halo-plan
+    # resident is a pure cache hit (no rebuild) AND survives an injected
+    # nan fault through the distributed operator's retry path
+    key_hp = OperatorKey(geometry=geom, kernel=("exponential", 0.1),
+                         tol=None, comm="halo-plan")
+    dsp, _ = partition_h2(shape, data, 8)
+    mv = make_dist_matvec(dsp, mesh, "blk", comm="halo-plan")
+
+    def must_not_build():
+        raise AssertionError("halo-plan operator rebuilt on a hit")
+
+    rep = svc(lambda shp: (lambda d, x: x + mv(d, x)),
+              fault_plan=ServiceFaultPlan(nan_at={1})).serve(
+        load(), key_hp, must_not_build)
+    m = rep.metrics
+    assert m["completed"] == n_req and m["dispatch_failures"] >= 1
+    assert m["retries"] >= 1
+    assert all(c.status == "ok" and np.isfinite(c.x).all()
+               for c in rep.completions.values())
+    for rid, c in rep.completions.items():
+        d = (np.linalg.norm(np.asarray(c.x) - sols["local"][rid])
+             / np.linalg.norm(sols["local"][rid]))
+        assert d < 1e-4, (rid, d)
+    print("OK serving_dist_fault", m["dispatch_failures"], m["retries"])
 
 
 def solver_checks(rng, geometries):
@@ -385,5 +531,94 @@ def obs_checks(mesh, dshape, dd, x_dev):
     print("OK obs_trace_neutral_solve", len(sv_on))
 
 
+def chaos_main():
+    """Deterministic chaos drills (ISSUE 8): the elastic distributed
+    fractional solve at p=8 under scheduled device-loss / NaN-corruption /
+    straggler faults must converge to the SAME tolerance as the fault-free
+    single-device reference with bounded extra iterations (at most one
+    checkpoint interval per fault), shrink-remesh to the scheduled
+    surviving device count, roll corrupted state back to the last valid
+    checkpoint, and flag stragglers without losing iterations."""
+    import tempfile
+
+    from repro.apps.fractional import solve, solve_distributed_elastic
+    from repro.runtime.chaos import ChaosPlan
+    from repro.runtime.fault import StragglerMonitor
+
+    assert len(jax.devices()) == 8, jax.devices()
+    mesh = jax.make_mesh((8,), ("blk",))
+    n, tol = 16, 1e-10
+
+    ref = solve(n, h2_tol=1e-7, tol=tol)
+    assert ref["converged"]
+    it_ref = ref["iters"]
+    print("OK chaos_ref", it_ref)
+
+    def du(res):
+        return (np.linalg.norm(res["u"] - ref["u"])
+                / np.linalg.norm(ref["u"]))
+
+    def run(ckpt_every, chaos=None, monitor=None):
+        with tempfile.TemporaryDirectory() as d:
+            return solve_distributed_elastic(
+                n, mesh, h2_tol=1e-7, tol=tol, ckpt_dir=d,
+                ckpt_every=ckpt_every, chaos=chaos, monitor=monitor)
+
+    # fault-free elastic path: exact iteration parity with the
+    # single-device reference (segmented while_loop == monolithic one)
+    res = run(ckpt_every=10)
+    assert res["converged"] and res["restarts"] == 0
+    assert res["iters"] == it_ref, (res["iters"], it_ref)
+    assert res["p_final"] == 8
+    assert du(res) < 1e-5, du(res)
+    assert res["report"].ckpt_save_s      # checkpoints actually written
+    print("OK chaos_clean", res["iters"], du(res))
+
+    # device loss at segment 2 -> shrink-remesh to p'=4, restore the
+    # segment-boundary checkpoint: zero iterations lost
+    res = run(ckpt_every=4, chaos=ChaosPlan(device_loss_at={2: 4}))
+    assert res["converged"] and res["restarts"] == 1
+    assert res["p_final"] == 4
+    assert res["iters"] == it_ref, (res["iters"], it_ref)
+    assert du(res) < 1e-5, du(res)
+    ev = [e for e in res["report"].events if e.kind == "device-loss"]
+    assert len(ev) == 1 and ev[0].p_from == 8 and ev[0].p_to == 4
+    assert res["report"].iters_lost("device-loss") == 0
+    print("OK chaos_device_loss", res["iters"], du(res),
+          res["report"].summary()["faults"]["device-loss"])
+
+    # NaN poisoning of segment 1's fresh iterate: the recurrence residual
+    # stays finite but the recomputed-residual tripwire fires; rollback
+    # re-runs exactly one checkpoint interval
+    res = run(ckpt_every=4, chaos=ChaosPlan(nan_at={1}))
+    assert res["converged"] and res["restarts"] == 1
+    assert res["p_final"] == 8
+    assert res["iters"] == it_ref, (res["iters"], it_ref)
+    assert du(res) < 1e-5, du(res)
+    assert res["report"].iters_lost("corruption") == 4   # == ckpt_every
+    assert np.isfinite(res["u"]).all()
+    print("OK chaos_nan_rollback", res["iters"],
+          res["report"].iters_lost("corruption"))
+
+    # straggler at segment 4: flagged by the monitor, costs (virtual)
+    # wall time but zero iterations and zero restarts; the inflation is
+    # far above threshold x EMA even though the EMA seeds on the first
+    # segment's compile-inclusive wall time
+    res = run(ckpt_every=2, chaos=ChaosPlan(straggle_at={4: 1000.0}),
+              monitor=StragglerMonitor(threshold=3.0, warmup=3))
+    assert res["converged"] and res["restarts"] == 0
+    assert res["iters"] == it_ref, (res["iters"], it_ref)
+    assert 4 in res["report"].straggler_flags, \
+        res["report"].straggler_flags
+    assert res["report"].iters_lost() == 0
+    print("OK chaos_straggler", res["report"].straggler_flags)
+
+    print("CHAOS_ALL_OK")
+
+
 if __name__ == "__main__":
-    main()
+    import sys
+    if "--chaos" in sys.argv[1:]:
+        chaos_main()
+    else:
+        main()

@@ -37,8 +37,12 @@ def test_distributed_h2_8dev():
                "OK obs_solve_bytes_halo-plan",
                "OK obs_solve_bytes_allgather", "OK obs_comm_delta",
                "OK obs_trace_neutral_matvec", "OK obs_trace_neutral_solve",
+               "OK serving_dist_cache", "OK serving_dist_fault",
                "ALL_OK"]
     for tag in ("uniform2d", "graded1d"):
+        markers += [f"OK unpartition_{tag}"]
+        for p_new in (4, 2):
+            markers += [f"OK repartition_{tag}_p8to{p_new}"]
         for p in (2, 8):
             markers += [f"OK solver_pcg_{tag}_p{p}",
                         f"OK solver_gmres_{tag}_p{p}"]
