@@ -29,7 +29,7 @@ from typing import Dict, List, Optional
 
 MODULES = ["accuracy", "hgemv", "compression_bench", "construction_bench",
            "dist_bench", "solver_bench", "serve_bench", "fault_bench",
-           "fractional", "lm_step"]
+           "guard_bench", "fractional", "lm_step"]
 
 #: per-record wall-time keys compared by ``compare_to_baseline``
 #: (p50/p99 are the serving-latency tripwires from BENCH_serve.json)

@@ -46,6 +46,9 @@ from repro.core.matvec import h2_matvec
 from repro.core.repartition import repartition_h2
 from repro.core.structure import H2Data, H2Shape
 from repro.checkpoint.manager import CheckpointManager
+from repro.guard.escalate import GUARD_COUNTERS, fp64_scalars, \
+    run_with_guards
+from repro.guard.status import worst_status
 from repro.obs.trace import phase
 from repro.runtime.chaos import ChaosPlan, ChaosReport, FaultEvent
 from repro.runtime.fault import (StepFailure, StragglerMonitor,
@@ -237,7 +240,54 @@ def solve(n: int, beta: float = 0.75, tol: float = 1e-8,
     res = jax.jit(solver)(b)
     return {"u": np.asarray(res.x).reshape(n, n), "iters": int(res.iters),
             "relres": float(res.relres), "converged": bool(res.converged),
+            "status": worst_status(res.status),
             "history": np.asarray(res.res_history), "prob": prob}
+
+
+def solve_with_guards(n: int, beta: float = 0.75, tol: float = 1e-8,
+                      h2_tol: float = 1e-6, use_precond: bool = True,
+                      construction: str = "cheb", maxiter: int = 200,
+                      loose_tol: Optional[float] = None) -> Dict:
+    """``solve`` through the guard escalation ladder (DESIGN.md §11).
+
+    Rungs: (1) the primary jitted PCG; (2) the same solve re-traced with
+    fp64 scalar accumulation (recovers dot-product-rounding stagnation);
+    (3) looser-tolerance GMRES as the last resort (handles indefinite
+    drift the CG recurrence cannot).  The returned dict matches ``solve``
+    plus the ladder outcome (``rung``, ``attempts``, ``recovered``,
+    ``guard_ok``).
+    """
+    prob = FractionalProblem(n, beta=beta, h2_tol=h2_tol,
+                             construction=construction).build()
+    apply_a = make_operator(prob)
+    b = jnp.ones((n * n,), jnp.float32) * (2.0 / n) ** 2
+    pre = make_preconditioner(prob) if use_precond else None
+
+    def primary():
+        return jax.jit(lambda rhs: _pcg(apply_a, rhs, pre, tol=tol,
+                                        maxiter=maxiter))(b)
+
+    def fp64_rung():
+        with fp64_scalars() as sdt:
+            return jax.jit(lambda rhs: _pcg(apply_a, rhs, pre, tol=tol,
+                                            maxiter=maxiter,
+                                            scalar_dtype=sdt))(b)
+
+    def loose_rung():
+        lt = loose_tol if loose_tol is not None else 100.0 * tol
+        return jax.jit(lambda rhs: _gmres(apply_a, rhs, pre, m=30, tol=lt,
+                                          maxiter=maxiter))(b)
+
+    out = run_with_guards([("primary", primary),
+                           ("fp64-scalars", fp64_rung),
+                           ("gmres-loose", loose_rung)])
+    res = out.result
+    return {"u": np.asarray(res.x).reshape(n, n), "iters": int(res.iters),
+            "relres": float(res.relres), "converged": bool(res.converged),
+            "status": worst_status(res.status),
+            "history": np.asarray(res.res_history), "prob": prob,
+            "rung": out.rung, "attempts": out.attempts,
+            "recovered": out.recovered, "guard_ok": out.ok}
 
 
 # ----------------------------------------------------------------------
@@ -381,6 +431,7 @@ def solve_distributed(n: int, mesh: Mesh, axis="blk", beta: float = 0.75,
     res = parts["fn"](*args, b_dev)
     return {"u": np.asarray(res.x).reshape(n, n), "iters": int(res.iters),
             "relres": float(res.relres), "converged": bool(res.converged),
+            "status": worst_status(res.status),
             "history": np.asarray(res.res_history), "prob": prob,
             "parts": parts, "placed_args": args, "b": b_dev}
 
@@ -442,6 +493,17 @@ def make_dist_solve_segment(prob: Dict, mesh: Mesh, axis="blk",
         true = _vec_norm(b - apply_a(state.x), axis)
         return true / bn_safe, state.res / bn_safe
 
+    def rebase_local(d, aux, mga, b, state):
+        # re-anchor the recurrence on the (possibly rebuilt) operator:
+        # fresh r = b - A x from the checkpointed iterate, keeping the
+        # iteration count.  Needed after a precision escalation — the
+        # carried r/p/rz of a bf16-payload segment are inconsistent with
+        # the fp32 rebuild at the old payload's accuracy level, which
+        # would re-fire the corruption tripwire forever.
+        apply_a, pre = _ops(d, aux, mga)
+        st = pcg_init(apply_a, b, pre, x0=state.x, axis=axis)
+        return dataclasses.replace(st, k=state.k)
+
     init = jax.jit(shard_map(init_local, mesh=mesh,
                              in_specs=(*specs, P(axis)),
                              out_specs=sspecs, check_vma=False))
@@ -451,6 +513,9 @@ def make_dist_solve_segment(prob: Dict, mesh: Mesh, axis="blk",
     residual = jax.jit(shard_map(res_local, mesh=mesh,
                                  in_specs=(*specs, P(axis), sspecs),
                                  out_specs=(P(), P()), check_vma=False))
+    rebaseline = jax.jit(shard_map(rebase_local, mesh=mesh,
+                                   in_specs=(*specs, P(axis), sspecs),
+                                   out_specs=sspecs, check_vma=False))
 
     def place(tree, tree_specs=specs):
         return jax.tree.map(
@@ -463,6 +528,7 @@ def make_dist_solve_segment(prob: Dict, mesh: Mesh, axis="blk",
             state, sspecs)
 
     return {"init": init, "segment": segment, "residual": residual,
+            "rebaseline": rebaseline,
             "args": args, "specs": specs, "state_specs": sspecs,
             "dshape": dshape, "mg": mg, "place": place,
             "place_state": place_state, "axis": axis}
@@ -510,12 +576,12 @@ def solve_distributed_elastic(n: int, mesh: Mesh, axis="blk",
     mon = monitor if monitor is not None else StragglerMonitor()
     mgr = CheckpointManager(ckpt_dir, keep=3) if ckpt_dir else None
 
-    ctx: Dict = {}
+    ctx: Dict = {"comm": comm}
 
     def build_ctx(mesh_cur, dist_source=None):
         parts = make_dist_solve_segment(
-            prob, mesh_cur, axis, comm=comm, tol=tol, steps=ckpt_every,
-            maxiter=maxiter, use_precond=use_precond,
+            prob, mesh_cur, axis, comm=ctx["comm"], tol=tol,
+            steps=ckpt_every, maxiter=maxiter, use_precond=use_precond,
             dist_source=dist_source)
         ctx["parts"] = parts
         ctx["mesh"] = mesh_cur
@@ -563,6 +629,15 @@ def solve_distributed_elastic(n: int, mesh: Mesh, axis="blk",
             report.events.append(FaultEvent(
                 kind="straggler", segment=seg, p_from=ctx["p"],
                 p_to=ctx["p"], iters_lost=0, recover_s=0.0))
+        st = worst_status(getattr(new_state, "status", None))
+        if st != 0:
+            # the solver's own in-loop breakdown guard (NaN / indefinite
+            # carry) — trips without waiting for the recomputed residual
+            pending.update(kind="breakdown", segment=seg, p_to=ctx["p"],
+                           k_done=int(jax.device_get(new_state.k)),
+                           t0=time.perf_counter())
+            raise StepFailure(
+                f"solver guard tripped at segment {seg} (status {st})")
         if not np.isfinite(true_rr) or true_rr > 10.0 * rec_rr + 1e-5:
             pending.update(kind="corruption", segment=seg, p_to=ctx["p"],
                            k_done=int(jax.device_get(new_state.k)),
@@ -586,6 +661,7 @@ def solve_distributed_elastic(n: int, mesh: Mesh, axis="blk",
         nonlocal state
         kind = pending.get("kind", "unknown")
         p_from = ctx["p"]
+        escalated = False
         if kind == "device-loss":
             p_new = pending["p_to"]
             devs = np.asarray(ctx["mesh"].devices).ravel()[:p_new]
@@ -594,6 +670,15 @@ def solve_distributed_elastic(n: int, mesh: Mesh, axis="blk",
             # mesh — fresh HaloPlans via partition_h2's plan construction
             src = (ctx["parts"]["dshape"], ctx["args"][0])
             build_ctx(Mesh(devs, (axis,)), dist_source=src)
+        elif kind in ("corruption", "breakdown") and \
+                ctx["comm"].endswith("-bf16"):
+            # precision-escalation rung: a numerically-suspect restart on
+            # a bf16-payload exchange drops to full fp32 payloads before
+            # resuming from the checkpoint
+            ctx["comm"] = ctx["comm"][:-len("-bf16")]
+            GUARD_COUNTERS["elastic/fp32-comm"] += 1
+            build_ctx(ctx["mesh"])
+            escalated = True
         if mgr is not None:
             mgr.wait()
         restored = mgr.latest_step() if mgr is not None else None
@@ -606,6 +691,12 @@ def solve_distributed_elastic(n: int, mesh: Mesh, axis="blk",
         else:
             state = ctx["parts"]["init"](*ctx["args"], ctx["b"])
             resume = 0
+        if escalated and restored is not None:
+            # the checkpointed recurrence was produced by the bf16
+            # exchange; re-anchor r/p/rz on the fp32 rebuild so the
+            # tripwire compares like against like from here on
+            state = ctx["parts"]["rebaseline"](*ctx["args"], ctx["b"],
+                                               state)
         k_res = int(jax.device_get(state.k))
         report.events.append(FaultEvent(
             kind=kind, segment=pending.get("segment", at), p_from=p_from,
@@ -626,7 +717,9 @@ def solve_distributed_elastic(n: int, mesh: Mesh, axis="blk",
             "iters": int(jax.device_get(state.k)),
             "relres": res / bn_safe,
             "converged": res <= tol * b_norm,
+            "status": worst_status(getattr(state, "status", None)),
             "history": history, "prob": prob, "p_final": ctx["p"],
+            "comm_final": ctx["comm"],
             "report": report, "parts": ctx["parts"], "restarts": restarts}
 
 

@@ -55,16 +55,12 @@ def reconstruct_dense(shape: H2Shape, data: H2Data) -> np.ndarray:
 
 
 def check_orthogonal(shape: H2Shape, data: H2Data, tol: float = 1e-4) -> float:
-    """Max deviation of V^T V from identity across all levels."""
-    worst = 0.0
-    for leaf, tr in ((data.u_leaf, data.e), (data.v_leaf, data.f)):
-        bases = explicit_bases(shape.depth, np.asarray(leaf),
-                               [np.asarray(t) for t in tr])
-        for l in range(shape.depth + 1):
-            b = bases[l]
-            if b.shape[-1] == 0:      # rank-0 level (sketch path, no coupling)
-                continue
-            gram = np.einsum("cwk,cwj->ckj", b, b)
-            eye = np.eye(gram.shape[-1])[None]
-            worst = max(worst, float(np.abs(gram - eye).max()))
-    return worst
+    """Max deviation of V^T V from identity across all levels.
+
+    Promoted to :mod:`repro.guard.validate` (the orthogonality leg of
+    operator certification); this thin re-export keeps old import paths
+    working.  Imported lazily — ``guard.validate`` imports this module
+    for ``explicit_bases``.
+    """
+    from repro.guard.validate import check_orthogonal as _impl
+    return _impl(shape, data, tol)

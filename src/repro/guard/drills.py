@@ -1,0 +1,72 @@
+"""Deterministic numerical-fault drills (the chaos harness's third leg).
+
+Process faults (device loss, stragglers) live in ``runtime.chaos``; these
+drills inject *numerical* faults with bit-reproducible outcomes:
+
+- :func:`drill_corrupt_operator` — flip entries of a marshaled value
+  buffer in place, the silent-corruption case ``validate_h2`` (twin
+  coherence) and ``certify_matvec`` must both catch before serving;
+- :func:`drill_rank_starved` — sketch-construction options starved far
+  below the kernel's numerical rank, so certification fails and the
+  oversampling escalation of ``construct_h2_certified`` has real work;
+- :func:`drill_near_singular` — a symmetric system with a controlled
+  near-zero (or slightly negative) eigenvalue and an RHS aligned with its
+  eigenvector: fp32 PCG trips INDEFINITE/STAGNATION instead of silently
+  burning maxiter.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.structure import H2Data
+
+
+def drill_corrupt_operator(data: H2Data, *, mode: str = "scale",
+                           magnitude: float = 32.0) -> str:
+    """Corrupt ``data`` IN PLACE: rewrite the largest marshaled coupling
+    buffer (the buffer the single-dispatch matvec actually reads, so the
+    plain ``s`` list still looks healthy).  Returns a description of the
+    injected fault.  ``mode``: ``"scale"`` multiplies the buffer by
+    ``magnitude`` (finite corruption — only certification catches it from
+    the matvec side), ``"nan"`` poisons one entry (NaN corruption — also
+    trips the solver NaN guard).
+    """
+    if data.s_mar is None:
+        raise ValueError("drill needs a marshaled operator (plan path)")
+    lvl = max(range(len(data.s_mar)), key=lambda l: data.s_mar[l].size)
+    if data.s_mar[lvl].size == 0:
+        raise ValueError("no nonzero marshaled coupling level to corrupt")
+    if mode == "nan":
+        data.s_mar[lvl] = data.s_mar[lvl].at[0, 0, 0].set(jnp.nan)
+        return f"s_mar[{lvl}][0,0,0] <- nan"
+    data.s_mar[lvl] = data.s_mar[lvl] * magnitude
+    return f"s_mar[{lvl}] *= {magnitude:g}"
+
+
+def drill_rank_starved() -> dict:
+    """Sketch options starved far below any smooth kernel's numerical
+    rank: certification fails on round one, recovers under the doubling
+    escalation of ``construct_h2_certified``."""
+    return {"tol": 1e-6, "max_rank": 2, "oversample": 1, "n_samples0": 2,
+            "seed": 0}
+
+
+def drill_near_singular(n: int = 64, *, lam_min: float = -1e-3,
+                        seed: int = 0, dtype=jnp.float32
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric system ``(A, b)`` with eigenvalues
+    ``{lam_min} U linspace(1, 10)`` and ``b`` dominated by the extreme
+    eigenvector.  ``lam_min < 0`` makes PCG's ``p^T A p`` go nonpositive
+    (INDEFINITE); a tiny positive ``lam_min`` makes fp32 PCG stagnate at
+    the rounding floor (STAGNATION).  Deterministic in ``seed``.
+    """
+    rng = np.random.default_rng(seed)
+    q, _ = np.linalg.qr(rng.standard_normal((n, n)))
+    lam = np.concatenate([[lam_min], np.linspace(1.0, 10.0, n - 1)])
+    a = (q * lam) @ q.T
+    # RHS leaning on the extreme eigenvector, plus a broadband tail
+    b = q[:, 0] + 1e-2 * rng.standard_normal(n)
+    return jnp.asarray(a, dtype), jnp.asarray(b, dtype)

@@ -1,0 +1,298 @@
+"""Structural certification of H^2 operators (guard pillar 1a).
+
+``validate_h2`` checks every *invariant the matvec silently assumes*:
+
+- shape coherence between ``H2Shape`` statics and the ``H2Data`` arrays;
+- index bounds and row-sortedness of the block lists (``segment_sum``
+  with ``indices_are_sorted=True`` corrupts results on unsorted rows
+  rather than failing);
+- ``CouplingPlan`` self-consistency: every non-pad slot maps back to a
+  block on its own row with the slot's source column, every block owns
+  exactly one row slot and one column slot, slot counts match the block
+  lists;
+- **marshaled-twin coherence**: ``s_mar``/``dense_mar`` are derived
+  buffers — the single-dispatch matvec reads only them, so an in-place
+  rewrite of ``s``/``dense`` without ``remarshal`` (or a corrupted
+  marshaled buffer) makes the operator silently wrong.  Recomputing the
+  gather and comparing bitwise catches both directions;
+- symmetry aliasing (``v_leaf``/``f`` must equal ``u_leaf``/``e`` and the
+  block pattern must be transpose-closed when ``shape.symmetric``);
+- finiteness of every value buffer;
+- basis orthogonality via :func:`check_orthogonal` (promoted from
+  ``core.reconstruct``) — reported always, enforced only on request since
+  the Chebyshev construction's interpolation bases are legitimately
+  non-orthonormal until ``orthogonalize`` runs.
+
+All checks are host-side numpy over the (small) index arrays plus device
+reductions over the value buffers; cost is far below one matvec.
+``validate_dist_h2`` applies the bounds/finiteness subset to a partitioned
+operator's ``HaloPlan``s and marshaled slabs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core.reconstruct import explicit_bases
+from repro.core.structure import H2Data, H2Shape
+
+
+@dataclasses.dataclass
+class ValidationReport:
+    """Outcome of a structural validation pass."""
+    ok: bool
+    errors: List[str]
+    warnings: List[str]
+    orthogonality: Optional[float] = None   # worst |V^T V - I| entry
+
+    def __bool__(self) -> bool:
+        return self.ok
+
+    def summary(self) -> str:
+        if self.ok and not self.warnings:
+            return "ok"
+        parts = [f"{len(self.errors)} error(s)"] if self.errors else []
+        parts += [f"{len(self.warnings)} warning(s)"] if self.warnings else []
+        head = "; ".join(self.errors[:3] + self.warnings[:2])
+        return ", ".join(parts) + (f": {head}" if head else "")
+
+
+def check_orthogonal(shape: H2Shape, data: H2Data, tol: float = 1e-4) -> float:
+    """Max deviation of V^T V from identity across all levels.
+
+    Promoted from ``core.reconstruct`` (which keeps a re-export): this is
+    the orthogonality leg of operator certification.  ``tol`` is kept for
+    signature compatibility; the caller compares the returned deviation.
+    """
+    worst = 0.0
+    for leaf, tr in ((data.u_leaf, data.e), (data.v_leaf, data.f)):
+        bases = explicit_bases(shape.depth, np.asarray(leaf),
+                               [np.asarray(t) for t in tr])
+        for l in range(shape.depth + 1):
+            b = bases[l]
+            if b.shape[-1] == 0:      # rank-0 level (sketch path, no coupling)
+                continue
+            gram = np.einsum("cwk,cwj->ckj", b, b)
+            eye = np.eye(gram.shape[-1])[None]
+            worst = max(worst, float(np.abs(gram - eye).max()))
+    return worst
+
+
+def _finite(name: str, arr, errors: List[str]) -> None:
+    a = np.asarray(arr)
+    if a.size and not np.all(np.isfinite(a)):
+        errors.append(f"{name}: non-finite values")
+
+
+def _bounds(name: str, arr, lo: int, hi: int, errors: List[str]) -> None:
+    a = np.asarray(arr)
+    if a.size and (a.min() < lo or a.max() >= hi):
+        errors.append(f"{name}: index out of bounds "
+                      f"[{int(a.min())},{int(a.max())}] vs [{lo},{hi})")
+
+
+def validate_h2(shape: H2Shape, data: H2Data, *,
+                check_marshal: bool = True, check_orth: bool = True,
+                require_orthogonal: bool = False,
+                tol_orth: float = 1e-3) -> ValidationReport:
+    """Full structural certification of a single-device H^2 operator."""
+    from repro.core.structure import marshal_blocks   # cycle-free, local
+
+    errors: List[str] = []
+    warnings: List[str] = []
+    depth, m = shape.depth, shape.leaf_size
+    nl = 1 << depth
+
+    # -- shape coherence -----------------------------------------------------
+    if len(data.e) != depth + 1:
+        errors.append(f"e: {len(data.e)} levels, shape.depth={depth}")
+        return ValidationReport(ok=False, errors=errors, warnings=warnings)
+    if tuple(data.u_leaf.shape) != (nl, m, shape.ranks[depth]):
+        errors.append(f"u_leaf shape {tuple(data.u_leaf.shape)} != "
+                      f"{(nl, m, shape.ranks[depth])}")
+    for l in range(1, depth + 1):
+        want = (1 << l, shape.ranks[l], shape.ranks[l - 1])
+        if tuple(data.e[l].shape) != want:
+            errors.append(f"e[{l}] shape {tuple(data.e[l].shape)} != {want}")
+    for l in range(depth + 1):
+        nb = shape.coupling_counts[l]
+        if data.s[l].shape[0] != nb:
+            errors.append(f"s[{l}]: {data.s[l].shape[0]} blocks, "
+                          f"coupling_counts={nb}")
+        if nb and tuple(data.s[l].shape[1:]) != (shape.ranks[l],
+                                                 shape.ranks[l]):
+            errors.append(f"s[{l}] block shape {tuple(data.s[l].shape[1:])}"
+                          f" != {(shape.ranks[l], shape.ranks[l])}")
+    if data.dense.shape[0] != shape.dense_count:
+        errors.append(f"dense: {data.dense.shape[0]} blocks, "
+                      f"dense_count={shape.dense_count}")
+
+    # -- index bounds + sortedness ------------------------------------------
+    for l in range(depth + 1):
+        _bounds(f"s_rows[{l}]", data.s_rows[l], 0, 1 << l, errors)
+        _bounds(f"s_cols[{l}]", data.s_cols[l], 0, 1 << l, errors)
+        rows = np.asarray(data.s_rows[l])
+        if rows.size and np.any(np.diff(rows) < 0):
+            errors.append(f"s_rows[{l}]: not row-sorted (segment_sum "
+                          "indices_are_sorted would corrupt)")
+    _bounds("d_rows", data.d_rows, 0, nl, errors)
+    _bounds("d_cols", data.d_cols, 0, nl, errors)
+    dr = np.asarray(data.d_rows)
+    if dr.size and np.any(np.diff(dr) < 0):
+        errors.append("d_rows: not row-sorted")
+
+    # -- CouplingPlan self-consistency --------------------------------------
+    if data.plan is None:
+        warnings.append("no marshaling plan (reference matvec path)")
+    else:
+        plan = data.plan
+        for l in range(depth + 1):
+            nn = 1 << l
+            nb = int(np.asarray(data.s_rows[l]).shape[0])
+            blk = np.asarray(plan.sblk[l])
+            col = np.asarray(plan.scol[l])
+            cnt = np.asarray(plan.scnt[l])
+            if blk.shape != col.shape or cnt.shape[0] != nn:
+                errors.append(f"plan[{l}]: slot array shapes incoherent")
+                continue
+            maxb = blk.shape[0] // max(nn, 1)
+            _bounds(f"plan.sblk[{l}]", blk, 0, nb + 1, errors)
+            _bounds(f"plan.scol[{l}]", col, 0, max(nn, 1), errors)
+            want_cnt = np.bincount(np.asarray(data.s_rows[l]),
+                                   minlength=nn).astype(cnt.dtype) \
+                if nb else np.zeros(nn, cnt.dtype)
+            if not np.array_equal(cnt, want_cnt):
+                errors.append(f"plan.scnt[{l}] != bincount(s_rows)")
+            live = blk < nb
+            if int(live.sum()) != nb:
+                errors.append(f"plan.sblk[{l}]: {int(live.sum())} live slots"
+                              f" for {nb} blocks")
+            if nb and maxb:
+                slots = np.nonzero(live)[0]
+                srow = slots // maxb
+                sr = np.asarray(data.s_rows[l])[blk[slots]]
+                sc = np.asarray(data.s_cols[l])[blk[slots]]
+                if not np.array_equal(srow, sr):
+                    errors.append(f"plan.sblk[{l}]: slot row != block row")
+                if not np.array_equal(col[slots], sc):
+                    errors.append(f"plan.scol[{l}]: slot col != block col")
+                cb = np.asarray(plan.cblk[l])
+                livec = cb[cb < nb]
+                if not np.array_equal(np.sort(livec), np.arange(nb)):
+                    errors.append(f"plan.cblk[{l}]: not a permutation of "
+                                  "blocks")
+        nbd = int(dr.shape[0])
+        _bounds("plan.dblk", plan.dblk, 0, nbd + 1, errors)
+        _bounds("plan.dcol", plan.dcol, 0, max(nl, 1), errors)
+        dcnt = np.asarray(plan.dcnt)
+        want = np.bincount(dr, minlength=nl).astype(dcnt.dtype) if nbd \
+            else np.zeros(nl, dcnt.dtype)
+        if not np.array_equal(dcnt, want):
+            errors.append("plan.dcnt != bincount(d_rows)")
+
+        # -- marshaled-twin coherence ---------------------------------------
+        if check_marshal:
+            if data.s_mar is None or data.dense_mar is None:
+                errors.append("plan present but marshaled buffers missing")
+            else:
+                for l in range(depth + 1):
+                    want_m = np.asarray(marshal_blocks(
+                        data.s[l], plan.sblk[l], 1 << l))
+                    if not np.array_equal(np.asarray(data.s_mar[l]), want_m):
+                        errors.append(f"s_mar[{l}] incoherent with s "
+                                      "(remarshal missing or buffer "
+                                      "corrupted)")
+                want_d = np.asarray(marshal_blocks(data.dense, plan.dblk, nl))
+                if not np.array_equal(np.asarray(data.dense_mar), want_d):
+                    errors.append("dense_mar incoherent with dense")
+
+    # -- symmetry aliasing ---------------------------------------------------
+    if shape.symmetric:
+        if not np.array_equal(np.asarray(data.u_leaf),
+                              np.asarray(data.v_leaf)):
+            errors.append("symmetric shape but v_leaf != u_leaf")
+        for l in range(1, depth + 1):
+            if not np.array_equal(np.asarray(data.e[l]),
+                                  np.asarray(data.f[l])):
+                errors.append(f"symmetric shape but f[{l}] != e[{l}]")
+        for l in range(depth + 1):
+            pairs = set(zip(np.asarray(data.s_rows[l]).tolist(),
+                            np.asarray(data.s_cols[l]).tolist()))
+            if pairs != {(c, r) for r, c in pairs}:
+                errors.append(f"s[{l}]: coupling pattern not "
+                              "transpose-closed")
+        dpairs = set(zip(dr.tolist(), np.asarray(data.d_cols).tolist()))
+        if dpairs != {(c, r) for r, c in dpairs}:
+            errors.append("dense pattern not transpose-closed")
+
+    # -- value finiteness ----------------------------------------------------
+    _finite("u_leaf", data.u_leaf, errors)
+    _finite("v_leaf", data.v_leaf, errors)
+    for l in range(1, depth + 1):
+        _finite(f"e[{l}]", data.e[l], errors)
+        _finite(f"f[{l}]", data.f[l], errors)
+    for l in range(depth + 1):
+        _finite(f"s[{l}]", data.s[l], errors)
+        if data.s_mar is not None:
+            _finite(f"s_mar[{l}]", data.s_mar[l], errors)
+    _finite("dense", data.dense, errors)
+    if data.dense_mar is not None:
+        _finite("dense_mar", data.dense_mar, errors)
+
+    # -- basis orthogonality -------------------------------------------------
+    orth = None
+    if check_orth and not errors:
+        orth = check_orthogonal(shape, data)
+        if orth > tol_orth:
+            msg = f"basis orthogonality deviation {orth:.2e} > {tol_orth:g}"
+            (errors if require_orthogonal else warnings).append(msg)
+
+    return ValidationReport(ok=not errors, errors=errors, warnings=warnings,
+                            orthogonality=orth)
+
+
+def validate_dist_h2(dshape, ddata) -> ValidationReport:
+    """Bounds/finiteness certification of a partitioned operator.
+
+    Checks the per-device marshaling plan and every ``HaloPlan``'s gather
+    maps against the slab sizes they index — the distributed matvec
+    gathers through these with ``mode="fill"`` or clipping, so an
+    out-of-range index silently zeros or duplicates data instead of
+    failing.  Value slabs are checked finite.
+    """
+    errors: List[str] = []
+    warnings: List[str] = []
+    p, lc, depth = dshape.p, dshape.lc, dshape.depth
+
+    def plan_check(tag: str, hp, nloc: int, nbmax: int) -> None:
+        for j, snd in enumerate(hp.send):
+            _bounds(f"{tag}.send[{j}]", snd, 0, max(nloc, 1), errors)
+        _bounds(f"{tag}.diag_blk", hp.diag_blk, 0, nbmax + 1, errors)
+        _bounds(f"{tag}.diag_col", hp.diag_col, 0, max(nloc, 1), errors)
+        _bounds(f"{tag}.off_blk", hp.off_blk, 0, nbmax + 1, errors)
+        _bounds(f"{tag}.bnd_rows", hp.bnd_rows, 0, max(nloc, 1), errors)
+        for nm in ("comb_idx", "off_idx", "blk_idx", "rowpos"):
+            a = np.asarray(getattr(hp, nm))
+            if a.size and a.min() < 0:
+                errors.append(f"{tag}.{nm}: negative index")
+
+    for i, l in enumerate(range(lc, depth + 1)):
+        nloc = dshape.nodes_local(l)
+        nbmax = int(np.asarray(ddata.s_br[i]).shape[0]) // p
+        _bounds(f"pb_blk[{i}]", ddata.pb_blk[i], 0, nbmax + 1, errors)
+        _bounds(f"pb_col[{i}]", ddata.pb_col[i], 0, max(1 << l, 1), errors)
+        plan_check(f"hp_br[{i}]", ddata.hp_br[i], nloc, nbmax)
+        _finite(f"s_br[{i}]", ddata.s_br[i], errors)
+        _finite(f"s_br_mar[{i}]", ddata.s_br_mar[i], errors)
+        _finite(f"s_br_mar_diag[{i}]", ddata.s_br_mar_diag[i], errors)
+        _finite(f"s_br_mar_off[{i}]", ddata.s_br_mar_off[i], errors)
+    nbd_max = int(np.asarray(ddata.dense).shape[0]) // p
+    plan_check("hp_dense", ddata.hp_dense, dshape.leaves_per_dev, nbd_max)
+    _finite("u_leaf", ddata.u_leaf, errors)
+    _finite("dense", ddata.dense, errors)
+    _finite("dense_mar", ddata.dense_mar, errors)
+    for l in range(lc):
+        _finite(f"s_top[{l}]", ddata.s_top[l], errors)
+    return ValidationReport(ok=not errors, errors=errors, warnings=warnings)

@@ -52,6 +52,11 @@ class Completion:
     x: Optional[np.ndarray] = None
     iters: int = 0
     relres: float = math.nan
+    # how the answer was produced: "primary" = the batched block_cg path,
+    # "degraded" = a fallback (per-column pcg / looser-tol operator) — so
+    # clients can tell "converged via fallback" from "converged normally"
+    via: str = "primary"
+    solver_status: int = 0              # worst solvers.STATUS_* code seen
 
     @property
     def latency(self) -> float:
@@ -128,6 +133,10 @@ class PanelState:
         self.b = np.zeros((self.n, self.width), self.dtype)
         self.x = np.zeros((self.n, self.width), self.dtype)
         self.iters = np.zeros((self.width,), np.int64)
+        # per-column guard state: last segment's solver status code and
+        # whether any fallback path touched the column (sticky until evict)
+        self.status = np.zeros((self.width,), np.int32)
+        self.degraded = np.zeros((self.width,), bool)
 
     @property
     def occupancy(self) -> int:
@@ -146,6 +155,8 @@ class PanelState:
             self.b[:, j] = req.b
             self.x[:, j] = 0.0
             self.iters[j] = 0
+            self.status[j] = 0
+            self.degraded[j] = False
 
     def evict(self, j: int) -> SolveRequest:
         req = self.reqs[j]
@@ -153,6 +164,8 @@ class PanelState:
         self.b[:, j] = 0.0
         self.x[:, j] = 0.0
         self.iters[j] = 0
+        self.status[j] = 0
+        self.degraded[j] = False
         return req
 
     def tightest_tol(self, default: float) -> float:

@@ -44,6 +44,7 @@ from typing import Any, Callable, Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
+from repro.guard.status import status_name, worst_status
 from repro.obs.trace import phase
 from repro.runtime.fault import (CircuitBreaker, FailureInjector,
                                  StepFailure, StragglerMonitor,
@@ -149,7 +150,7 @@ class SolverService:
             k: 0 for k in ("dispatches", "dispatch_failures", "retries",
                            "hedges", "hedge_wins", "degraded_dispatches",
                            "completed", "timeouts", "rejected", "resubmits",
-                           "unconverged")}
+                           "unconverged", "guard_trips")}
         self._occupancy: List[int] = []
 
     # -- operator acquisition (cache-aside) -----------------------------
@@ -235,6 +236,18 @@ class SolverService:
             e = StepFailure("solver diverged (non-finite iterate)")
             e.duration = dur
             raise e
+        # the solver's own breakdown guard: a NaN / indefinite / stagnated
+        # column is a dispatch failure (the breaker consumes it like a
+        # device loss) — the recomputed-x finite check above only catches
+        # the NaN case, and only after the fact
+        code = worst_status(getattr(res, "status", None))
+        if code != 0:
+            self.metrics["guard_trips"] += 1
+            e = StepFailure(f"solver guard tripped "
+                            f"({status_name(code)})")
+            e.duration = dur
+            e.status = code
+            raise e
         if self.straggler.record(idx, dur) and self.hedging:
             res, dur = self._hedge(seg, entry, panel, tol, res, dur)
         return res, dur
@@ -289,6 +302,10 @@ class SolverService:
             panel.x = np.array(res.x)
             panel.iters += np.asarray(res.iters, np.int64)
             relres = np.asarray(res.relres, np.float64)
+            panel.status[:] = np.asarray(res.status, np.int32)
+            for j, req in enumerate(panel.reqs):
+                if req is not None:
+                    panel.degraded[j] = True
             return relres, total
         one = self._pcg_fn(entry)
         for j, req in enumerate(panel.reqs):
@@ -301,6 +318,8 @@ class SolverService:
             panel.x[:, j] = np.asarray(res.x)
             panel.iters[j] += int(res.iters)
             relres[j] = float(res.relres)
+            panel.status[j] = worst_status(getattr(res, "status", None))
+            panel.degraded[j] = True
         return relres, total
 
     def _dispatch_with_faults(self, entry: CacheEntry, panel: PanelState,
@@ -337,6 +356,7 @@ class SolverService:
             self.breaker.record_success(clock + elapsed)
             panel.x = np.array(res.x)
             panel.iters += np.asarray(res.iters, np.int64)
+            panel.status[:] = np.asarray(res.status, np.int32)
             return np.asarray(res.relres, np.float64), elapsed
 
     # -- the serve loop --------------------------------------------------
@@ -445,7 +465,10 @@ class SolverService:
                             req.rid, "ok" if done else "failed",
                             req.arrival, clock, x=panel.x[:, j].copy(),
                             iters=int(panel.iters[j]),
-                            relres=float(relres[j]))
+                            relres=float(relres[j]),
+                            via="degraded" if panel.degraded[j]
+                            else "primary",
+                            solver_status=int(panel.status[j]))
                         panel.evict(j)
 
         m = dict(self.metrics)
@@ -488,6 +511,7 @@ class ThreadedSolverService:
         self.service = service
         self.entry = service.operator(key, build_fn)
         self._seg = service._segment_fn(self.entry, service.restart_every)
+        self._one = service._pcg_fn(self.entry)   # guard-trip fallback
         self._queue = RequestQueue(service.queue_capacity,
                                    drain_hint=service.queue_drain_hint)
         self._panel = PanelState(n=self.entry.shape.n,
@@ -501,7 +525,7 @@ class ThreadedSolverService:
         self._rids = itertools.count()
         self.metrics: Dict[str, int] = {
             "submitted": 0, "completed": 0, "timeouts": 0,
-            "dispatches": 0, "duplicates": 0}
+            "dispatches": 0, "duplicates": 0, "guard_trips": 0}
         self._thread = threading.Thread(target=self._run, daemon=True)
         self._thread.start()
 
@@ -540,9 +564,11 @@ class ThreadedSolverService:
 
     # -- solver thread ---------------------------------------------------
     def _publish(self, req: SolveRequest, status: str, x: np.ndarray,
-                 iters: int, relres: float) -> None:
+                 iters: int, relres: float, via: str = "primary",
+                 solver_status: int = 0) -> None:
         c = Completion(req.rid, status, req.arrival, time.monotonic(),
-                       x=x, iters=iters, relres=relres)
+                       x=x, iters=iters, relres=relres, via=via,
+                       solver_status=solver_status)
         with self._lock:
             if req.rid in self._completions:
                 self.metrics["duplicates"] += 1
@@ -579,12 +605,34 @@ class ThreadedSolverService:
             panel.x = np.array(res.x)
             panel.iters += np.asarray(res.iters, np.int64)
             relres = np.asarray(res.relres, np.float64)
+            panel.status[:] = np.asarray(res.status, np.int32)
+            # per-column fallback: a guard-tripped column (NaN /
+            # indefinite / stagnated) gets one full-budget single-RHS pcg
+            # retry and its completion is marked via="degraded" so the
+            # client can tell it converged through the fallback
+            for j, req in enumerate(panel.reqs):
+                if req is None or panel.status[j] == 0:
+                    continue
+                self.metrics["guard_trips"] += 1
+                with phase("serve/degraded"):
+                    one = self._one(self.entry.data, panel.b[:, j],
+                                    req.tol)
+                panel.x[:, j] = np.asarray(one.x)
+                panel.iters[j] += int(one.iters)
+                relres[j] = float(one.relres)
+                panel.status[j] = worst_status(getattr(one, "status",
+                                                       None))
+                panel.degraded[j] = True
             for j, req in enumerate(panel.reqs):
                 if req is None:
                     continue
                 ok = relres[j] <= req.tol
-                if ok or panel.iters[j] >= max_total_iters:
+                if ok or panel.iters[j] >= max_total_iters \
+                        or panel.degraded[j]:
                     self._publish(req, "ok" if ok else "failed",
                                   panel.x[:, j].copy(),
-                                  int(panel.iters[j]), float(relres[j]))
+                                  int(panel.iters[j]), float(relres[j]),
+                                  via="degraded" if panel.degraded[j]
+                                  else "primary",
+                                  solver_status=int(panel.status[j]))
                     panel.evict(j)

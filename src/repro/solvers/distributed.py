@@ -33,13 +33,14 @@ def result_specs(x_spec) -> SolveResult:
     """PartitionSpec pytree for a SolveResult: the solution is sharded like
     ``b``; every psum-reduced scalar/history is replicated."""
     return SolveResult(x=x_spec, iters=P(), relres=P(), converged=P(),
-                       res_history=P())
+                       res_history=P(), status=P())
 
 
 def pcg_state_specs(x_spec) -> PCGState:
     """PartitionSpec pytree for a PCGState: the vector carries (x, r, p)
     are sharded like ``b``; the psum-reduced scalars are replicated."""
-    return PCGState(k=P(), x=x_spec, r=x_spec, p=x_spec, rz=P(), res=P())
+    return PCGState(k=P(), x=x_spec, r=x_spec, p=x_spec, rz=P(), res=P(),
+                    status=P())
 
 
 def make_dist_krylov_segment(dshape: DistH2Shape, mesh: Mesh, axis,

@@ -613,6 +613,23 @@ def chaos_main():
     assert res["report"].iters_lost() == 0
     print("OK chaos_straggler", res["report"].straggler_flags)
 
+    # guard-rail escalation drill (DESIGN.md §11): NaN corruption during
+    # a bf16-payload run triggers the precision-escalation rung — the
+    # restart rebuilds the segment with full fp32 halo payloads and the
+    # solve converges with a clean final status
+    from repro.guard import GUARD_COUNTERS, reset_guard_counters
+    reset_guard_counters()
+    with tempfile.TemporaryDirectory() as d:
+        res = solve_distributed_elastic(
+            n, mesh, h2_tol=1e-7, tol=tol, ckpt_dir=d, ckpt_every=4,
+            comm="halo-plan-bf16", chaos=ChaosPlan(nan_at={1}))
+    assert res["converged"] and res["restarts"] == 1
+    assert res["comm_final"] == "halo-plan", res["comm_final"]
+    assert res["status"] == 0
+    assert GUARD_COUNTERS["elastic/fp32-comm"] == 1
+    assert du(res) < 1e-5, du(res)
+    print("OK chaos_guard_fp32comm", res["iters"], res["comm_final"])
+
     print("CHAOS_ALL_OK")
 
 

@@ -32,5 +32,6 @@ def test_chaos_drill_8dev():
     out = proc.stdout
     for marker in ["OK chaos_ref", "OK chaos_clean",
                    "OK chaos_device_loss", "OK chaos_nan_rollback",
-                   "OK chaos_straggler", "CHAOS_ALL_OK"]:
+                   "OK chaos_straggler", "OK chaos_guard_fp32comm",
+                   "CHAOS_ALL_OK"]:
         assert marker in out, (marker, out, proc.stderr)

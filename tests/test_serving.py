@@ -478,3 +478,78 @@ class TestThreadedService:
             assert c.status == "ok"
         with pytest.raises(KeyError):
             ts.result(999, timeout=0.01)
+
+
+class TestGuardPropagation:
+    """ISSUE (guard rails): completions distinguish "converged via
+    fallback" from "converged normally" — ``via``/``solver_status``/
+    ``iters`` propagate through both the virtual serve loop and the
+    threaded front-end."""
+
+    def test_fault_free_completions_are_primary(self, operator):
+        _, key, build = operator
+        rep = _drill_service().serve(_load(n_requests=8).requests(),
+                                     key, build)
+        for c in rep.completions.values():
+            assert c.via == "primary"
+            assert c.solver_status == 0
+            assert c.iters > 0
+
+    def test_degraded_completions_are_marked(self, operator):
+        """An open breaker forces the loose-operator path; those
+        completions must say so instead of masquerading as primary."""
+        pts, key, build = operator
+        from repro.core.compression import compress
+
+        def build_loose():
+            shape, data, extra = build()
+            cshape, cdata = compress(shape, data, tol=1e-4)
+            return cshape, cdata, extra
+
+        cache = OperatorCache()
+        cache.get_or_build(key.loosened(1e-4), build_loose)
+        svc = SolverService(
+            cache, panel_width=4, restart_every=20, max_segments=20,
+            tol=1e-5, dispatch_cost=0.02, seed=0, degraded="loose",
+            degraded_tol=1e-3,
+            breaker=CircuitBreaker(failure_threshold=1, cooldown=10.0),
+            fault_plan=ServiceFaultPlan(device_loss_at={
+                i: "dl" for i in range(0, 8)}))
+        load = PoissonLoad(n=256, rate=100.0, n_requests=4, tol=1e-5,
+                           seed=3)
+        rep = svc.serve(load.requests(), key, build)
+        assert rep.metrics["completed"] == 4
+        degraded = [c for c in rep.completions.values()
+                    if c.via == "degraded"]
+        assert degraded, "no completion recorded the fallback path"
+        for c in degraded:
+            assert c.iters > 0 and np.isfinite(c.x).all()
+
+    def test_threaded_guard_trip_falls_back_per_column(self, operator):
+        """A NaN RHS trips the block_cg guard for its column only: the
+        poisoned request is published via the degraded path with a
+        nonzero solver_status, while a concurrent healthy request is
+        served primary with solver_status == 0."""
+        from repro.serving import ThreadedSolverService
+        from repro.solvers import STATUS_OK
+
+        _, key, build = operator
+        svc = SolverService(OperatorCache(), panel_width=4,
+                            restart_every=20, max_segments=20,
+                            queue_capacity=8, tol=1e-6)
+        ts = ThreadedSolverService(svc, key, build)
+        rng = np.random.default_rng(0)
+        good = rng.standard_normal(256).astype(np.float32)
+        bad = good.copy()
+        bad[7] = np.nan
+        rid_good = ts.submit(good)
+        rid_bad = ts.submit(bad)
+        cg = ts.result(rid_good, timeout=120)
+        cb = ts.result(rid_bad, timeout=120)
+        ts.close(timeout=30)
+        assert cg.status == "ok"
+        assert cg.via == "primary" and cg.solver_status == STATUS_OK
+        assert cg.iters > 0
+        assert cb.via == "degraded"
+        assert cb.solver_status != STATUS_OK
+        assert ts.metrics["guard_trips"] >= 1
