@@ -7,6 +7,9 @@ Times the three communication modes of the `shard_map` distributed matvec
                    gathers, one fused ppermute round per neighbor distance
   - ``ppermute``   broadcast halo (whole level x 2*rad per level)
   - ``allgather``  whole-level gather baseline ((P-1)x volume)
+  - ``halo-plan-merged``  the solver lowering (``hide_flops > 0``): every
+                   per-offset round collapsed into ONE residue-layout
+                   ``all_to_all`` (DESIGN.md §12) — round-count-minimal
 
 Structure: 1D interval, exponential kernel, leaf 32, Chebyshev p=8,
 eta = 0.9 — a C_sp ~ 3 operator (the boundary-integral-type geometry of
@@ -55,7 +58,8 @@ def _worker(quick: bool) -> None:
 
     from repro.core.construction import construct_h2
     from repro.core.dist import (dist_specs, make_dist_matvec,
-                                 matvec_comm_bytes, partition_h2)
+                                 matvec_comm_bytes, merged_exchange_bytes,
+                                 partition_h2)
     from repro.core.kernels_fn import exponential_kernel
     from repro.core.matvec import h2_matvec
     from repro.obs.timers import interleaved_times, median_ratio
@@ -81,6 +85,11 @@ def _worker(quick: bool) -> None:
 
         mvs = {comm: make_dist_matvec(dshape, mesh, "blk", comm=comm)
                for comm in ("halo-plan", "ppermute", "allgather")}
+        # the solver lowering (ISSUE 10): hide_flops > 0 collapses every
+        # per-offset ppermute into ONE residue-layout all_to_all — the
+        # round-count-minimal form the fused fractional iteration embeds
+        mvs["halo-plan-merged"] = make_dist_matvec(
+            dshape, mesh, "blk", comm="halo-plan", hide_flops=1)
         for comm, mv in mvs.items():          # warmup + parity gate
             y = np.asarray(mv(dd, x))
             err = np.linalg.norm(y - y_ref) / np.linalg.norm(y_ref)
@@ -88,11 +97,15 @@ def _worker(quick: bool) -> None:
         acc = interleaved_times(
             {comm: (lambda mv=mv: mv(dd, x)) for comm, mv in mvs.items()},
             reps=12 if quick else 24, warmup=0)   # parity gate warmed up
+        root_b = (p - 1) * dshape.ranks[dshape.lc] * nv * 4
         for comm, ts in acc.items():
+            model = (root_b + merged_exchange_bytes(dshape, nv)
+                     if comm == "halo-plan-merged"
+                     else matvec_comm_bytes(dshape, nv, comm))
             records.append({
                 "name": f"dist_mv_N{shape.n}_{comm}",
                 "us": round(float(np.median(ts)) * 1e6, 1),
-                "model_bytes_per_dev": matvec_comm_bytes(dshape, nv, comm),
+                "model_bytes_per_dev": model,
                 "N": shape.n, "nv": nv, "p": p, "comm": comm,
                 "Csp": bs.sparsity_constant(),
             })
@@ -103,6 +116,8 @@ def _worker(quick: bool) -> None:
                 median_ratio(acc["allgather"], acc["halo-plan"]), 2),
             "halo_plan_vs_ppermute": round(
                 median_ratio(acc["ppermute"], acc["halo-plan"]), 2),
+            "merged_vs_halo_plan": round(
+                median_ratio(acc["halo-plan"], acc["halo-plan-merged"]), 2),
         })
     print(MARKER + json.dumps(records))
 

@@ -66,10 +66,23 @@ def compare_to_baseline(records: List[Dict], baseline: List[Dict],
                         threshold: float = 0.2) -> List[str]:
     """Non-fatal regression check: ``# WARN`` line per timing key (and
     per phase of a ``phases`` breakdown) that exceeds the baseline by
-    more than ``threshold`` (relative).  Unknown names are skipped."""
+    more than ``threshold`` (relative).  Unknown names are skipped.
+
+    One ABSOLUTE floor rides along (ISSUE 10): any record carrying a
+    ``halo_plan_vs_allgather`` end-to-end solver ratio below 1.0 warns
+    even without a matching baseline entry — the fused iteration
+    schedule exists to keep the compressed exchange ahead of the
+    allgather baseline inside the solve, so a sub-1.0 ratio is a
+    regression regardless of what the previous run measured."""
     base = {_record_key(b): b for b in baseline}
     warns: List[str] = []
     for r in records:
+        ratio = r.get("halo_plan_vs_allgather")
+        if isinstance(ratio, (int, float)) and ratio < 1.0:
+            warns.append(
+                f"# WARN {_record_key(r)} halo_plan_vs_allgather="
+                f"{ratio:.2f} < 1.0 — compressed-exchange solve slower "
+                "than the allgather baseline (fused-schedule tripwire)")
         b = base.get(_record_key(r))
         if b is None:
             continue

@@ -19,6 +19,13 @@ whole-solve regression this benchmark reports is localized in the same
 JSON that reports it.  Device count must be fixed before jax initializes,
 so the measurement runs in a subprocess (`--worker`).
 
+Since ISSUE 10 the halo-plan records run the FUSED iteration schedule by
+default (``make_dist_solve``'s ``fused`` default; DESIGN.md §12) while
+allgather stays two-step, so ``frac_solve_speedup_*``'s
+``halo_plan_vs_allgather`` is the headline end-to-end ratio the fused
+restructuring must keep >= 1 — ``benchmarks.run``'s baseline check
+treats any value below 1.0 as an (absolute, non-fatal) tripwire hit.
+
 Set ``REPRO_BENCH_QUICK=1`` (or ``benchmarks.run --quick``) for the CI
 smoke tier (n in {16, 32}; the full tier runs n in {32, 64}).
 """
@@ -67,10 +74,12 @@ def _worker(quick: bool) -> None:
             solvers[comm] = (parts, args, int(res.iters),
                              float(res.relres))
         it0 = {c: solvers[c][2] for c in comms}
-        # the comm modes reassociate the same sums, so a residual hovering
-        # at the tol crossing may legitimately shift the count by a step
-        # or two (see tests/dist_worker.py solver parity slack)
-        assert abs(it0["halo-plan"] - it0["allgather"]) <= 2, it0
+        # the comm modes reassociate the same sums — and fused halo-plan
+        # additionally pins the combined-GEMM association where auto used
+        # to split — so a residual hovering at the tol crossing may
+        # legitimately shift the count by a few steps (exact fused-vs-
+        # two-step parity per comm is pinned in tests/dist_worker.py)
+        assert abs(it0["halo-plan"] - it0["allgather"]) <= 5, it0
 
         acc = interleaved_times(
             {comm: (lambda comm=comm: solvers[comm][0]["fn"](
@@ -84,11 +93,13 @@ def _worker(quick: bool) -> None:
             records.append({
                 "name": f"frac_solve_n{n}_{comm}",
                 "n": n, "N": n * n, "p": p, "comm": comm,
+                "fused": bool(parts["fused"]),
                 "iters": iters, "relres": relres,
                 "us_per_solve": round(us, 1),
                 "us_per_iter": round(us / max(iters, 1), 1),
                 "model_bytes_per_iter": dist_solve_comm_bytes(
-                    parts["dshape"], parts["mg"], comm),
+                    parts["dshape"], parts["mg"], comm,
+                    tcaps=parts["tcaps"], fused=parts["fused"]),
                 "phases": {ph: round(sec * 1e6, 1)
                            for ph, sec in corrected.items()},
             })

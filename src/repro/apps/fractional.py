@@ -39,7 +39,9 @@ from repro.core.clustering import build_cluster_tree
 from repro.core.construction import construct_h2
 from repro.core.compression import compress
 from repro.core.dist import (DistH2Data, DistH2Shape, dist_h2_matvec_local,
-                             dist_specs, matvec_comm_bytes, partition_h2)
+                             dist_specs, matvec_comm_bytes,
+                             merged_exchange_bytes, partition_h2)
+from repro.core.halo import build_transpose_plan, transpose_a2a
 from repro.core.kernels_fn import (diffusivity_2d, fractional_kernel_2d,
                                    fractional_kernel_2d_positive)
 from repro.core.matvec import h2_matvec
@@ -55,7 +57,7 @@ from repro.runtime.fault import (StepFailure, StragglerMonitor,
                                  run_with_restarts)
 from repro.solvers import (TRACE_COUNTS, build_grid_mg, mg_halo_bytes,
                            mg_precond_local, mg_specs, pcg_init, pcg_segment,
-                           pcg_state_specs, result_specs)
+                           pcg_state_specs, result_specs, solver_hide_flops)
 from repro.solvers import gmres as _gmres
 from repro.solvers import pcg as _pcg
 from repro.solvers.krylov import _norm as _vec_norm
@@ -328,6 +330,17 @@ def build_dist_problem(prob: Dict, p: int, n_cycles: int = 2, nu: int = 3,
         "perm": jnp.asarray(prob["perm"], jnp.int32),
         "unperm": jnp.asarray(prob["unperm"], jnp.int32),
     }
+    if p > 1:
+        # all_to_all transposition plans for the fused iteration: each
+        # device ships only the rows its peers actually need (vs the
+        # (p-1)*nloc rows of the all_gather two-step path), and the
+        # C-stencil row halo rides the same round as extra lanes
+        _, tin_send, tin_take = build_transpose_plan(prob["perm"], p)
+        _, tout_send, tout_take = build_transpose_plan(prob["unperm"], p)
+        aux.update(tin_send=jnp.asarray(tin_send),
+                   tin_take=jnp.asarray(tin_take),
+                   tout_send=jnp.asarray(tout_send),
+                   tout_take=jnp.asarray(tout_take))
 
     def spec_tree(axis):
         return (dist_specs(dshape, axis),
@@ -338,23 +351,59 @@ def build_dist_problem(prob: Dict, p: int, n_cycles: int = 2, nu: int = 3,
 
 
 def _dist_apply_a(dshape: DistH2Shape, d: DistH2Data, aux: Dict, mg,
-                  mga, x: jax.Array, axis, comm: str, n: int, h: float
-                  ) -> jax.Array:
+                  mga, x: jax.Array, axis, comm: str, n: int, h: float,
+                  schedule: str = "auto", backend: str = "jnp",
+                  fused: bool = False, hide: int = 0) -> jax.Array:
     """Per-device A u = h^2 (D + K + C) u; ``x``: grid-order row strip.
 
     The H^2 kernel works in tree order — the grid<->tree transpositions
-    are device-boundary-crossing permutations, realized as one tiled
-    ``all_gather`` + local take each way (the top-tree replication
-    deviation already ships comparable volume; see DESIGN.md §7).  The
-    local term ``(D + gamma*C) u`` is the V-cycle's level-0 operator
-    (``mg._apply_op``: ppermute row halo, precomputed faces).
+    are device-boundary-crossing permutations.  Two-step (``fused=False``):
+    one tiled ``all_gather`` + local take each way (the top-tree
+    replication deviation already ships comparable volume; DESIGN.md §7).
+    Fused (DESIGN.md §12): each transposition is ONE ``all_to_all`` on
+    its precomputed plan (``core.halo.build_transpose_plan``) shipping
+    only the rows peers actually reference, and the C-stencil's row halo
+    rides the inbound round as extra lanes — the local term then needs NO
+    collective of its own.  ``hide > 0`` additionally lowers the H^2
+    exchange to its merged single-round form (``core.dist``).
     """
     p = dshape.p
+    if fused and p > 1:
+        rows = n // p
+        x2d = x.reshape(rows, n)
+        me = jax.lax.axis_index(axis)
+        with phase("solve/transpose-in"):
+            # dump-row trick: sender lane r = what lands at receiver r;
+            # our LAST row feeds receiver me+1's top halo, our FIRST row
+            # receiver me-1's bottom halo; edge devices dump to row p
+            dump = jnp.zeros((p + 1, n), x.dtype)
+            dump = jax.lax.dynamic_update_slice(dump, x2d[-1:],
+                                                (me + 1, 0))
+            dump = jax.lax.dynamic_update_slice(
+                dump, x2d[:1], (jnp.where(me >= 1, me - 1, p), 0))
+            xt, ex = transpose_a2a(x, aux["tin_send"], aux["tin_take"],
+                                   axis, extra=dump[:p])
+        ku_t = dist_h2_matvec_local(dshape, d, xt[:, None], axis, comm,
+                                    backend, schedule, hide)[:, 0]
+        with phase("solve/transpose-out"):
+            ku, _ = transpose_a2a(ku_t, aux["tout_send"],
+                                  aux["tout_take"], axis)
+        with phase("solve/stencil"):
+            top = jax.lax.dynamic_slice(ex, (jnp.maximum(me - 1, 0), 0),
+                                        (1, n))
+            top = jnp.where(me >= 1, top, 0.0)
+            bot = jax.lax.dynamic_slice(ex, (jnp.minimum(me + 1, p - 1), 0),
+                                        (1, n))
+            bot = jnp.where(me <= p - 2, bot, 0.0)
+            local = _mg_apply_op(mg, mga, 0, x2d, axis,
+                                 halo=(top, bot)).reshape(x.shape)
+            return (h * h) * (ku + local)
     with phase("solve/transpose-in"):
         xf = jax.lax.all_gather(x, axis, axis=0, tiled=True) if p > 1 \
             else x
         xt = jnp.take(xf, aux["perm"], axis=0)[:, None]
-    ku_t = dist_h2_matvec_local(dshape, d, xt, axis, comm)[:, 0]
+    ku_t = dist_h2_matvec_local(dshape, d, xt, axis, comm, backend,
+                                schedule)[:, 0]
     with phase("solve/transpose-out"):
         kf = jax.lax.all_gather(ku_t, axis, axis=0, tiled=True) if p > 1 \
             else ku_t
@@ -365,32 +414,50 @@ def _dist_apply_a(dshape: DistH2Shape, d: DistH2Data, aux: Dict, mg,
         return (h * h) * (ku + local)
 
 
+def _fused_default(fused: Optional[bool], comm: str) -> bool:
+    """Fused iteration default: on for the halo-plan comm modes (whose
+    merged lowering it completes), off for the allgather/ppermute
+    baselines — forceable either way."""
+    return comm.startswith("halo-plan") if fused is None else bool(fused)
+
+
 def make_dist_solve(prob: Dict, mesh: Mesh, axis="blk",
                     method: str = "pcg", comm: str = "halo-plan",
                     tol: float = 1e-8, maxiter: int = 200,
                     use_precond: bool = True, restart: int = 30,
-                    n_cycles: int = 2, nu: int = 3, omega: float = 0.7
-                    ) -> Dict:
+                    n_cycles: int = 2, nu: int = 3, omega: float = 0.7,
+                    schedule: str = "auto", backend: str = "jnp",
+                    fused: Optional[bool] = None) -> Dict:
     """One jitted shard_map program running the whole fractional solve.
 
     Returns ``{"fn", "args", "specs", "dshape", "mg", "place"}``:
     ``fn(ddata, aux, mg_arrays, b) -> SolveResult`` with every input
     placed by ``place(args)`` / ``b`` sharded ``P(axis)`` in grid order.
+
+    ``fused`` selects the DESIGN.md §12 iteration schedule (all_to_all
+    transpositions carrying the stencil halo, merged single-round H^2
+    exchange, deep-halo V-cycle smoothing); default: on for halo-plan
+    comm modes.  ``schedule``/``backend`` thread through to the H^2
+    matvec (``core.dist``).
     """
     p = mesh.shape[axis]
     n, h = prob["n"], prob["h"]
     dshape, mg, args, spec_tree = build_dist_problem(
         prob, p, n_cycles=n_cycles, nu=nu, omega=omega)
     specs = spec_tree(axis)
+    fused = _fused_default(fused, comm)
+    hide = solver_hide_flops(mg) if fused else 0
+    bf16 = comm.endswith("-bf16")
 
     def local(d, aux, mga, b):
         TRACE_COUNTS["dist_fractional"] += 1
 
         def apply_a(x):
             return _dist_apply_a(dshape, d, aux, mg, mga, x, axis, comm,
-                                 n, h)
+                                 n, h, schedule, backend, fused, hide)
 
-        pre = (lambda r: mg_precond_local(mg, mga, r, axis)) \
+        pre = (lambda r: mg_precond_local(mg, mga, r, axis, fused=fused,
+                                          bf16=bf16)) \
             if use_precond else None
         if method == "pcg":
             return _pcg(apply_a, b, pre, tol=tol, maxiter=maxiter,
@@ -410,21 +477,26 @@ def make_dist_solve(prob: Dict, mesh: Mesh, axis="blk",
             lambda a, s: jax.device_put(a, NamedSharding(mesh, s)),
             tree, tree_specs)
 
+    tcaps = (args[1]["tin_send"].shape[1], args[1]["tout_send"].shape[1]) \
+        if p > 1 else (0, 0)
     return {"fn": fn, "args": args, "specs": specs, "dshape": dshape,
-            "mg": mg, "place": place, "axis": axis}
+            "mg": mg, "place": place, "axis": axis, "fused": fused,
+            "tcaps": tcaps, "schedule": schedule}
 
 
 def solve_distributed(n: int, mesh: Mesh, axis="blk", beta: float = 0.75,
                       tol: float = 1e-8, h2_tol: float = 1e-6,
                       maxiter: int = 200, comm: str = "halo-plan",
                       method: str = "pcg", use_precond: bool = True,
-                      construction: str = "cheb") -> Dict:
+                      construction: str = "cheb", schedule: str = "auto",
+                      fused: Optional[bool] = None) -> Dict:
     """End-to-end distributed fractional-diffusion solve on a mesh."""
     prob = FractionalProblem(n, beta=beta, h2_tol=h2_tol,
                              construction=construction).build()
     parts = make_dist_solve(prob, mesh, axis, method=method, comm=comm,
                             tol=tol, maxiter=maxiter,
-                            use_precond=use_precond)
+                            use_precond=use_precond, schedule=schedule,
+                            fused=fused)
     b = jnp.ones((n * n,), jnp.float32) * prob["h"] ** 2
     args = parts["place"](parts["args"])
     b_dev = jax.device_put(b, NamedSharding(mesh, P(axis)))
@@ -446,7 +518,9 @@ def make_dist_solve_segment(prob: Dict, mesh: Mesh, axis="blk",
                             steps: int = 10, maxiter: int = 200,
                             use_precond: bool = True, n_cycles: int = 2,
                             nu: int = 3, omega: float = 0.7,
-                            dist_source=None) -> Dict:
+                            dist_source=None, schedule: str = "auto",
+                            backend: str = "jnp",
+                            fused: Optional[bool] = None) -> Dict:
     """Segmented (checkpointable) variant of ``make_dist_solve``.
 
     Instead of one monolithic solve program this returns the three jitted
@@ -467,13 +541,17 @@ def make_dist_solve_segment(prob: Dict, mesh: Mesh, axis="blk",
         dist_source=dist_source)
     specs = spec_tree(axis)
     sspecs = pcg_state_specs(P(axis))
+    fused = _fused_default(fused, comm)
+    hide = solver_hide_flops(mg) if fused else 0
+    bf16 = comm.endswith("-bf16")
 
     def _ops(d, aux, mga):
         def apply_a(x):
             return _dist_apply_a(dshape, d, aux, mg, mga, x, axis, comm,
-                                 n, h)
+                                 n, h, schedule, backend, fused, hide)
 
-        pre = (lambda r: mg_precond_local(mg, mga, r, axis)) \
+        pre = (lambda r: mg_precond_local(mg, mga, r, axis, fused=fused,
+                                          bf16=bf16)) \
             if use_precond else None
         return apply_a, pre
 
@@ -531,7 +609,7 @@ def make_dist_solve_segment(prob: Dict, mesh: Mesh, axis="blk",
             "rebaseline": rebaseline,
             "args": args, "specs": specs, "state_specs": sspecs,
             "dshape": dshape, "mg": mg, "place": place,
-            "place_state": place_state, "axis": axis}
+            "place_state": place_state, "axis": axis, "fused": fused}
 
 
 def solve_distributed_elastic(n: int, mesh: Mesh, axis="blk",
@@ -724,18 +802,45 @@ def solve_distributed_elastic(n: int, mesh: Mesh, axis="blk",
 
 
 def dist_solve_comm_bytes(dshape: DistH2Shape, mg, comm: str = "halo-plan",
-                          bytes_per_el: int = 4) -> int:
+                          bytes_per_el: int = 4,
+                          tcaps: Optional[Tuple[int, int]] = None,
+                          fused: Optional[bool] = None) -> int:
     """Modeled per-device collective bytes of ONE distributed PCG iteration
-    on the fractional operator: H^2 matvec exchange + the two grid<->tree
-    transposition gathers + the C-stencil row halo + the V-cycle halos
-    (``mg_halo_bytes``) + the three psum'd CG scalars."""
+    on the fractional operator.
+
+    Two-step (``fused=False``): H^2 matvec exchange + the two grid<->tree
+    transposition all_gathers + the C-stencil row halo + the V-cycle
+    halos (``mg_halo_bytes``) + the three psum'd CG scalars.  Fused
+    (DESIGN.md §12): the branch-root gather + ONE merged H^2 all_to_all
+    (``merged_exchange_bytes``), the two plan-compressed transposition
+    all_to_alls (``tcaps`` = their per-peer row caps, from
+    ``make_dist_solve(...)["tcaps"]``; the inbound one carries the
+    stencil halo lanes for free), the fused V-cycle halos, and the
+    psums."""
     p = dshape.p
     if p <= 1:
         return 0
+    fused = _fused_default(fused, comm)
+    psums = 3 * (p - 1) * bytes_per_el
+    if fused and tcaps is not None:
+        if comm.startswith("halo-plan"):
+            # merged single-round H^2 exchange
+            k_lc = dshape.ranks[dshape.lc]
+            mv = (p - 1) * k_lc * bytes_per_el \
+                + merged_exchange_bytes(dshape, 1, comm, bytes_per_el)
+        else:
+            # allgather/ppermute keep their per-level exchange even when
+            # the transpositions and V-cycle are fused
+            mv = matvec_comm_bytes(dshape, 1, comm, bytes_per_el)
+        cap_in, cap_out = tcaps
+        # inbound lanes + the [p, n]-wide stencil-halo extra lanes
+        transpose = (p - 1) * (cap_in + mg.levels[0] + cap_out) \
+            * bytes_per_el
+        return mv + transpose + psums + mg_halo_bytes(
+            mg, bytes_per_el, fused=True, bf16=comm.endswith("-bf16"))
     mv = matvec_comm_bytes(dshape, 1, comm, bytes_per_el)
     transpose = 2 * (p - 1) * (dshape.n // p) * bytes_per_el
     stencil = 2 * mg.levels[0] * bytes_per_el
-    psums = 3 * (p - 1) * bytes_per_el
     return mv + transpose + stencil + mg_halo_bytes(mg, bytes_per_el) \
         + psums
 

@@ -425,7 +425,8 @@ def _top_coupling(dshape: DistH2Shape, d: DistH2Data, xhat_top, yhat_top,
 
 
 def _use_split(schedule: str, nloc: int, maxb: int, maxb_d: int,
-               n_bnd: int, maxb_o: int) -> bool:
+               n_bnd: int, maxb_o: int, hide_flops: int = 0,
+               level_flops: int = 0) -> bool:
     """Static per-level schedule policy.
 
     ``overlap`` always splits (the §4.2 diag/off twins — on hardware with
@@ -436,10 +437,19 @@ def _use_split(schedule: str, nloc: int, maxb: int, maxb_d: int,
     ``auto`` splits only where the split's padded volume is not larger —
     on balanced grids interior rows keep ``maxb_d == maxb``, so the fused
     form usually wins wherever overlap cannot be realized.
+
+    ``hide_flops`` makes auto solver-aware: it is the caller's static
+    estimate of NON-matvec compute per iteration (C-stencil + V-cycle
+    smoothing) scheduled after the exchange is issued.  When that alone
+    dwarfs this level's coupling GEMM (``level_flops``), the halo already
+    hides under solver compute and the split's padded off-diagonal GEMM
+    buys nothing — auto keeps the combined form.
     """
     if schedule == "overlap":
         return True
     if schedule == "fused":
+        return False
+    if hide_flops and hide_flops >= level_flops:
         return False
     return nloc * maxb_d + n_bnd * maxb_o < nloc * maxb
 
@@ -476,9 +486,32 @@ def _hp_payload_layout(dshape: DistH2Shape, nv: int):
     return seg, tot
 
 
+def _hp_merged_layout(tot: Dict[int, int], p: int):
+    """Residue-class layout merging EVERY per-offset payload into one
+    ``all_to_all`` row buffer ``[p, capmax]``.
+
+    The a2a semantics (``split_axis=0, concat_axis=0, tiled=False``) give
+    receiver ``q`` row ``s`` = sender ``s``'s row ``q``.  Chunk ``delta``
+    therefore travels sender row ``(me - delta) % p`` -> receiver row
+    ``(me + delta) % p``; two offsets share a row exactly when their
+    residues ``delta % p`` collide (p=2: +1/-1), resolved by cumulative
+    column offsets within the residue class.  Returns ``(capmax, pos)``
+    with ``pos[delta] = (residue, col_lo)`` and ``capmax`` = the widest
+    residue class (min 1 so the buffer is never zero-width).
+    """
+    by_res: Dict[int, int] = {}
+    pos: Dict[int, Tuple[int, int]] = {}
+    for delta in sorted(tot):
+        res = delta % p
+        pos[delta] = (res, by_res.get(res, 0))
+        by_res[res] = by_res.get(res, 0) + tot[delta]
+    capmax = max(by_res.values()) if by_res else 1
+    return max(capmax, 1), pos
+
+
 def _hp_pack_exchange(dshape: DistH2Shape, d: DistH2Data, xhat, x_leaves,
-                      axis, comm: str, backend: str = "jnp"
-                      ) -> Dict[int, jax.Array]:
+                      axis, comm: str, backend: str = "jnp",
+                      merged: bool = False) -> Dict[int, jax.Array]:
     """Phase A of the §4.2 overlap schedule: gather every level's planned
     send rows (branch levels AND dense leaves), flatten and fuse them per
     neighbor offset, and issue one packed ``ppermute`` per offset — the
@@ -486,6 +519,10 @@ def _hp_pack_exchange(dshape: DistH2Shape, d: DistH2Data, xhat, x_leaves,
     ``chunks[delta]``, laid out per ``_hp_payload_layout``.  Factored out
     of ``_coupling_phase_overlap`` so the obs profiler can cut the matvec
     at the pack/exchange boundary.
+
+    ``merged=True`` (the solver lowering) further collapses all offsets
+    into ONE ``all_to_all`` round on the ``_hp_merged_layout`` residue
+    layout; the landed ``chunks`` dict is identical either way.
 
     Level ``lc`` never exchanges: the C-level branch-root gather that
     feeds the replicated top sweep already delivered every device's
@@ -515,6 +552,38 @@ def _hp_pack_exchange(dshape: DistH2Shape, d: DistH2Data, xhat, x_leaves,
             _pack(xhat[l], d.hp_br[i], dshape.br_offsets[i])
         _pack(x_leaves, d.hp_dense, dshape.dense_offsets)
     chunks: Dict[int, jax.Array] = {}
+    if merged and parts:
+        # Solver lowering: in-loop collective COUNT dominates latency, so
+        # every offset rides ONE all_to_all on the residue-class layout
+        # (``_hp_merged_layout``).  Cross-residue slots ship zeros — the
+        # padding is bounded by the widest residue class, and at solver
+        # scale one a2a beats len(offsets) ppermutes decisively.
+        payloads = {delta: (jnp.concatenate(lst) if len(lst) > 1 else lst[0])
+                    for delta, lst in parts.items()}
+        tot = {delta: int(pay.shape[0]) for delta, pay in payloads.items()}
+        capmax, pos = _hp_merged_layout(tot, p)
+        me = jax.lax.axis_index(axis)
+        dtype = next(iter(payloads.values())).dtype
+        with phase("halo/pack"):
+            buf = jnp.zeros((p, capmax), dtype)
+            for delta, pay in payloads.items():
+                res, lo = pos[delta]
+                row = jnp.mod(me - res, p)
+                buf = jax.lax.dynamic_update_slice(
+                    buf, pay.reshape(1, -1), (row, lo))
+        if bf16:
+            buf = jax.lax.optimization_barrier(buf)
+        with phase("halo/round"):
+            land = jax.lax.all_to_all(buf, axis, split_axis=0,
+                                      concat_axis=0, tiled=False)
+            land = land.reshape(p, capmax)
+        with phase("halo/land"):
+            for delta in payloads:
+                res, lo = pos[delta]
+                row = jnp.mod(me + res, p)
+                chunks[delta] = jax.lax.dynamic_slice(
+                    land, (row, lo), (1, tot[delta]))[0]
+        return chunks
     for delta, lst in parts.items():
         payload = jnp.concatenate(lst) if len(lst) > 1 else lst[0]
         if bf16:
@@ -530,7 +599,8 @@ def _hp_pack_exchange(dshape: DistH2Shape, d: DistH2Data, xhat, x_leaves,
 def _coupling_phase_overlap(dshape: DistH2Shape, d: DistH2Data, xhat,
                             xhat_top, x_leaves, axis, comm: str,
                             backend: str = "jnp", schedule: str = "auto",
-                            chunks: Optional[Dict[int, jax.Array]] = None):
+                            chunks: Optional[Dict[int, jax.Array]] = None,
+                            hide_flops: int = 0):
     """Compressed-halo coupling + dense phases on the §4.2 overlap schedule.
 
     Program order (= XLA scheduling opportunity): (A) the fused packed
@@ -547,6 +617,10 @@ def _coupling_phase_overlap(dshape: DistH2Shape, d: DistH2Data, xhat,
     ``chunks`` optionally supplies already-landed payloads (phase A run
     separately — the obs profiler's stage cut); they must follow
     ``_hp_payload_layout``.
+
+    ``hide_flops > 0`` marks a solver-embedded matvec: phase A lowers to
+    the merged single-``all_to_all`` exchange and the auto schedule gets
+    the solver's hideable compute (see ``_use_split``).
     """
     depth, lc, p = dshape.depth, dshape.lc, dshape.p
     m = dshape.leaf_size
@@ -556,10 +630,12 @@ def _coupling_phase_overlap(dshape: DistH2Shape, d: DistH2Data, xhat,
     seg, _ = _hp_payload_layout(dshape, nv)
 
     # --- phase A: pack + fuse payloads per offset, one ppermute each
+    # (or, solver-embedded, ONE merged all_to_all for every offset)
     if chunks is None:
         with phase("hgemv/exchange"):
             chunks = _hp_pack_exchange(dshape, d, xhat, x_leaves, axis,
-                                       comm, backend)
+                                       comm, backend,
+                                       merged=hide_flops > 0)
 
     def _landed(src, key, offsets, caps, width):
         """[nloc + sum(caps), width-per-row ...] buffer in plan layout."""
@@ -573,16 +649,19 @@ def _coupling_phase_overlap(dshape: DistH2Shape, d: DistH2Data, xhat,
 
     def _split(i, k):
         nloc_g = d.s_br_mar[i].shape[0]
-        return _use_split(schedule, nloc_g, d.s_br_mar[i].shape[-1] // k,
+        maxb = d.s_br_mar[i].shape[-1] // k
+        return _use_split(schedule, nloc_g, maxb,
                           d.s_br_mar_diag[i].shape[-1] // k,
                           d.s_br_mar_off[i].shape[0],
-                          d.s_br_mar_off[i].shape[-1] // k)
+                          d.s_br_mar_off[i].shape[-1] // k,
+                          hide_flops, 2 * nloc_g * k * maxb * k * nv)
 
-    d_split = _use_split(schedule, d.dense_mar.shape[0],
-                         d.dense_mar.shape[-1] // m,
+    dmaxb_full = d.dense_mar.shape[-1] // m
+    d_split = _use_split(schedule, d.dense_mar.shape[0], dmaxb_full,
                          d.dense_mar_diag.shape[-1] // m,
                          d.dense_mar_off.shape[0],
-                         d.dense_mar_off.shape[-1] // m)
+                         d.dense_mar_off.shape[-1] // m,
+                         hide_flops, 2 * nl * m * dmaxb_full * m * nv)
 
     # --- phase B: diagonal GEMMs + dense diagonal + replicated top
     # (fused-schedule levels wait for their halo in phase C instead)
@@ -735,15 +814,21 @@ def _dense_phase(dshape: DistH2Shape, d: DistH2Data, x_leaves, axis,
 def dist_h2_matvec_local(dshape: DistH2Shape, d: DistH2Data, x: jax.Array,
                          axis, comm: str = "halo-plan",
                          backend: str = "jnp",
-                         schedule: str = "auto") -> jax.Array:
-    """Per-device body (call inside shard_map). x: [n_local, nv]."""
+                         schedule: str = "auto",
+                         hide_flops: int = 0) -> jax.Array:
+    """Per-device body (call inside shard_map). x: [n_local, nv].
+
+    ``hide_flops > 0`` marks a solver-embedded call: the halo-plan
+    exchange merges into one ``all_to_all`` and the auto schedule
+    accounts for the solver compute available to hide it under.
+    """
     nv = x.shape[-1]
     x_leaves = x.reshape(dshape.leaves_per_dev, dshape.leaf_size, nv)
     xhat, xhat_top = _local_upsweep(dshape, d, x_leaves, axis)
     if comm in ("halo-plan", "halo-plan-bf16"):
         yhat, yhat_top, y_de = _coupling_phase_overlap(
             dshape, d, xhat, xhat_top, x_leaves, axis, comm, backend,
-            schedule)
+            schedule, hide_flops=hide_flops)
     else:
         yhat, yhat_top = _coupling_phase(dshape, d, xhat, xhat_top, axis,
                                          comm)
@@ -754,7 +839,8 @@ def dist_h2_matvec_local(dshape: DistH2Shape, d: DistH2Data, x: jax.Array,
 
 def make_dist_matvec(dshape: DistH2Shape, mesh: Mesh, axis,
                      comm: str = "halo-plan", nv_axis: Optional[str] = None,
-                     backend: str = "jnp", schedule: str = "auto"):
+                     backend: str = "jnp", schedule: str = "auto",
+                     hide_flops: int = 0):
     """Build the jitted distributed matvec for a mesh.
 
     ``axis``: mesh axis name (or tuple of names) carrying the block rows.
@@ -765,14 +851,15 @@ def make_dist_matvec(dshape: DistH2Shape, mesh: Mesh, axis,
     ``schedule`` picks the halo-plan GEMM schedule per level (see
     ``_use_split``): "overlap" = the §4.2 diag/off split, "fused" = one
     combined GEMM per level from the landed buffer, "auto" = static flop
-    model.
+    model.  ``hide_flops > 0`` requests the solver-embedded lowering
+    (merged single-``all_to_all`` exchange + hide-aware auto).
     """
     specs = dist_specs(dshape, axis)
     xspec = P(axis, nv_axis)
 
     def fn(d: DistH2Data, x: jax.Array) -> jax.Array:
         return dist_h2_matvec_local(dshape, d, x, axis, comm, backend,
-                                    schedule)
+                                    schedule, hide_flops)
 
     shmapped = shard_map(
         fn, mesh=mesh,
@@ -1104,3 +1191,23 @@ def matvec_comm_bytes(dshape: DistH2Shape, nv: int, comm: str = "halo-plan",
     else:
         total += 2 * dshape.dense_radius * nl * row
     return total
+
+
+def merged_exchange_bytes(dshape: DistH2Shape, nv: int,
+                          comm: str = "halo-plan",
+                          bytes_per_el: int = 4) -> int:
+    """Per-device wire bytes of the solver lowering's merged exchange:
+    one ``[p, capmax]`` ``all_to_all`` on the ``_hp_merged_layout``
+    residue layout — ``(p-1) * capmax`` elements cross the wire (the own
+    row stays local).  Replaces the per-offset halo-plan terms of
+    ``matvec_comm_bytes`` when ``hide_flops > 0``; ``-bf16`` ships
+    2-byte payloads.
+    """
+    if dshape.p <= 1:
+        return 0
+    _, tot = _hp_payload_layout(dshape, nv)
+    if not tot:
+        return 0
+    capmax, _ = _hp_merged_layout(tot, dshape.p)
+    bpe = 2 if comm.endswith("-bf16") else bytes_per_el
+    return (dshape.p - 1) * capmax * bpe

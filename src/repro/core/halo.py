@@ -43,10 +43,21 @@ for the ``shard_map`` SPMD setting, built entirely on the host at
 
 - **Fused transport** — all levels' payloads for a given offset are
   flattened and concatenated, so the whole matvec ships ONE ``ppermute``
-  round-trip per neighbor distance regardless of tree depth.  (A fused
-  single-round ``all_to_all`` variant was measured strictly slower on the
-  CPU backend — the [P, cap] send-buffer assembly and per-peer slicing
-  cost more than the extra permute rounds save — and removed.)
+  round-trip per neighbor distance regardless of tree depth.  For the
+  *bare* matvec this per-offset form is volume-optimal and kept.  Inside
+  the solver iteration, where stencil + V-cycle compute hides transfer
+  latency, collective COUNT dominates wall-clock: measured inside a
+  ``fori_loop`` on the 8-fake-device CPU mesh one ``ppermute`` costs
+  ~35-40 µs nearly independent of payload size while one ``all_to_all``
+  replacing ANY number of per-offset rounds costs ~the same as a single
+  ``all_gather`` (~56 µs).  The solve therefore lowers the same
+  per-offset payloads into ONE ``all_to_all`` round via a residue-class
+  row layout (``dist._hp_pack_exchange(merged=True)``), and the
+  grid<->tree transpositions ride the same transport through
+  :func:`build_transpose_plan` (DESIGN.md §12).  (An earlier note here
+  claimed the ``all_to_all`` variant strictly slower — that was measured
+  per-dispatch, outside the solver loop, where the ~300 µs dispatch
+  overhead swamps the collective count.)
 
 Volume per level drops from ``2*rad*nloc`` rows to ``sum(caps)`` rows
 (``caps[delta] <= nloc`` always; far less once devices own many nodes).
@@ -354,3 +365,80 @@ def exchange(x: jax.Array, plan: HaloPlan, offsets: Sequence[int], axis,
     """start + land in one go (no compute to overlap: R-factor /
     projection-map exchanges in the compression sweeps)."""
     return land_halo(x, start_halo(x, plan, offsets, axis, p, bf16))
+
+
+# ---------------------------------------------------------------------------
+# generic cross-device permutation as ONE all_to_all (the solver's fused
+# grid<->tree transposition rounds; DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+def build_transpose_plan(g: np.ndarray, p: int):
+    """Host-side send/recv plan realizing the sharded gather
+    ``y[i] = x[g[i]]`` (both ``x`` and ``y`` in contiguous ``n/p`` row
+    strips) as ONE ``all_to_all`` instead of ``all_gather`` + take.
+
+    Same compression idea as :func:`build_send_lists`: sender ``s`` owes
+    receiver ``r`` only the *unique* local rows of ``s`` that ``r``'s
+    ``g``-slice references, padded to the global per-pair cap so SPMD
+    shapes stay uniform.  Returns ``(cap, send_idx, take_idx)``:
+
+    ``cap``       static per-(sender, receiver) row cap (>= 1)
+    ``send_idx``  [p*p, cap] int32, sharded over senders: device ``s``'s
+                  local ``[p, cap]`` slice holds, per receiver ``r``, the
+                  sorted local rows to pack into its lane (padding
+                  repeats row 0 — harmless, never landed-read)
+    ``take_idx``  [p * (n//p)] int32, sharded over receivers: positions
+                  into the landed ``[p, cap]`` buffer (flattened) whose
+                  row ``s`` is the lane received from sender ``s``.
+    """
+    g = np.asarray(g, np.int64)
+    n = g.shape[0]
+    if n % p:
+        raise ValueError(f"transpose plan needs p | n ({n} % {p})")
+    nloc = n // p
+    send: dict = {}
+    cap = 1
+    for r in range(p):
+        need = g[r * nloc:(r + 1) * nloc]
+        for s in range(p):
+            rows = np.unique(need[(need // nloc) == s]) - s * nloc
+            send[(s, r)] = rows
+            cap = max(cap, len(rows))
+    send_idx = np.zeros((p * p, cap), np.int32)
+    for (s, r), rows in send.items():
+        send_idx[s * p + r, :len(rows)] = rows
+    take_idx = np.empty(n, np.int32)
+    for r in range(p):
+        need = g[r * nloc:(r + 1) * nloc]
+        for i, gi in enumerate(need):
+            s = int(gi) // nloc
+            pos = int(np.searchsorted(send[(s, r)], int(gi) - s * nloc))
+            take_idx[r * nloc + i] = s * cap + pos
+    return cap, send_idx, take_idx
+
+
+def transpose_a2a(x: jax.Array, send_idx: jax.Array, take_idx: jax.Array,
+                  axis, extra=None):
+    """Apply a :func:`build_transpose_plan` permutation inside shard_map.
+
+    ``x``: the device's [nloc] strip; ``send_idx``/``take_idx``: the
+    device's local plan slices ([p, cap] / [nloc]).  ``extra`` optionally
+    appends per-receiver side-channel rows ``[p, e]`` onto the payload
+    lanes (the C-stencil row halo rides the solve's transpose-in round);
+    returns ``(y, extra_landed)`` where ``extra_landed[s]`` is the extra
+    row sender ``s`` addressed to this device (``None`` without
+    ``extra``).
+    """
+    p, cap = send_idx.shape
+    with phase("halo/pack"):
+        buf = jnp.take(x, send_idx.reshape(-1), axis=0).reshape(p, cap)
+        if extra is not None:
+            buf = jnp.concatenate([buf, extra.astype(buf.dtype)], axis=1)
+    with phase("halo/round"):
+        land = jax.lax.all_to_all(buf, axis, split_axis=0, concat_axis=0,
+                                  tiled=False)
+        land = land.reshape(p, buf.shape[1])
+    with phase("halo/land"):
+        y = jnp.take(land[:, :cap].reshape(p * cap), take_idx, axis=0)
+    ex = land[:, cap:] if extra is not None else None
+    return y, ex

@@ -61,19 +61,42 @@ PHASE_ORDER = (
 EXT_INPUTS = ("d", "aux", "mga", "xvec", "r", "pvec", "rz")
 
 
-def phase_comm_model(dshape, mg, comm: str, bytes_per_el: int = 4
-                     ) -> Dict[str, int]:
+def phase_comm_model(dshape, mg, comm: str, bytes_per_el: int = 4,
+                     tcaps=None, fused=None) -> Dict[str, int]:
     """Per-phase decomposition of ``dist_solve_comm_bytes`` — modeled
     per-device collective bytes of ONE PCG iteration, keyed by phase.
-    The terms sum exactly to ``dist_solve_comm_bytes(dshape, mg, comm)``.
-    """
-    from repro.core.dist import matvec_comm_bytes
+    The terms sum exactly to ``dist_solve_comm_bytes(dshape, mg, comm,
+    tcaps=tcaps, fused=fused)`` for the matching schedule: pass
+    ``tcaps``/``fused`` from ``make_dist_solve``'s parts for the fused
+    iteration (all_to_all transpositions carrying the stencil halo,
+    merged H^2 exchange, deep-halo V-cycle)."""
+    from repro.apps.fractional import _fused_default
+    from repro.core.dist import matvec_comm_bytes, merged_exchange_bytes
     from repro.solvers.mg import mg_halo_bytes
 
     p = dshape.p
     if p <= 1:
         return {ph: 0 for ph in PHASE_ORDER}
     root = (p - 1) * dshape.ranks[dshape.lc] * bytes_per_el
+    if _fused_default(fused, comm) and tcaps is not None:
+        cap_in, cap_out = tcaps
+        exch = merged_exchange_bytes(dshape, 1, comm, bytes_per_el) \
+            if comm.startswith("halo-plan") \
+            else matvec_comm_bytes(dshape, 1, comm, bytes_per_el) - root
+        return {
+            "solve/transpose-in": (p - 1) * (cap_in + mg.levels[0])
+            * bytes_per_el,                    # + stencil-halo lanes
+            "hgemv/upsweep": root,             # branch-root all_gather
+            "hgemv/exchange": exch,
+            "hgemv/coupling-gemm": 0,
+            "hgemv/downsweep": 0,
+            "solve/transpose-out": (p - 1) * cap_out * bytes_per_el,
+            "solve/stencil": 0,                # rode the transpose-in a2a
+            "precond/vcycle": mg_halo_bytes(
+                mg, bytes_per_el, fused=True,
+                bf16=comm.endswith("-bf16")),
+            "krylov/scalars": 3 * (p - 1) * bytes_per_el,
+        }
     mv = matvec_comm_bytes(dshape, 1, comm, bytes_per_el)
     tr = (p - 1) * (dshape.n // p) * bytes_per_el
     return {
@@ -114,10 +137,11 @@ def build_solve_stages(parts: Dict, mesh, comm: str, loop_m: int = 12):
                                  _dense_phase, _hp_pack_exchange,
                                  _hp_payload_layout, _local_downsweep,
                                  _local_upsweep)
+    from repro.core.halo import transpose_a2a
     from repro.obs.timers import Stage
     from repro.solvers.krylov import _dot, _norm
     from repro.solvers.mg import _apply_op as _mg_apply_op
-    from repro.solvers.mg import mg_precond_local
+    from repro.solvers.mg import mg_precond_local, solver_hide_flops
 
     dshape, mg, axis = parts["dshape"], parts["mg"], parts["axis"]
     dspec, aux_spec, mg_spec = parts["specs"]
@@ -127,6 +151,9 @@ def build_solve_stages(parts: Dict, mesh, comm: str, loop_m: int = 12):
     sh, rep, shv = P(axis), P(), P(axis, None)
     br_levels = tuple(range(lc, depth + 1))
     top_levels = tuple(range(lc + 1))
+    fused = bool(parts.get("fused")) and p > 1
+    bf16 = comm.endswith("-bf16")
+    hide = solver_hide_flops(mg) if fused else 0
 
     def shmap(fn, in_specs, out_specs):
         return jax.jit(shard_map(fn, mesh=mesh, in_specs=in_specs,
@@ -137,10 +164,35 @@ def build_solve_stages(parts: Dict, mesh, comm: str, loop_m: int = 12):
         xtop = dict(zip(top_levels, sweep[1]))
         return xh, xtop
 
-    def s_transpose_in(aux, x):
-        xf = jax.lax.all_gather(x, axis, axis=0, tiled=True) if p > 1 \
-            else x
-        return jnp.take(xf, aux["perm"], axis=0)[:, None]
+    if fused:
+        # fused transposition: one plan-compressed all_to_all whose extra
+        # lanes carry the stencil row halo (same bodies as
+        # apps.fractional._dist_apply_a's fused branch)
+        def s_transpose_in(aux, x):
+            rows = n // p
+            x2d = x.reshape(rows, n)
+            me = jax.lax.axis_index(axis)
+            dump = jnp.zeros((p + 1, n), x.dtype)
+            dump = jax.lax.dynamic_update_slice(dump, x2d[-1:],
+                                                (me + 1, 0))
+            dump = jax.lax.dynamic_update_slice(
+                dump, x2d[:1], (jnp.where(me >= 1, me - 1, p), 0))
+            xt, ex = transpose_a2a(x, aux["tin_send"], aux["tin_take"],
+                                   axis, extra=dump[:p])
+            top = jax.lax.dynamic_slice(ex, (jnp.maximum(me - 1, 0), 0),
+                                        (1, n))
+            top = jnp.where(me >= 1, top, 0.0)
+            bot = jax.lax.dynamic_slice(
+                ex, (jnp.minimum(me + 1, p - 1), 0), (1, n))
+            bot = jnp.where(me <= p - 2, bot, 0.0)
+            return xt[:, None], top, bot
+        tin_out, tin_outputs = (shv, sh, sh), ("xt", "top", "bot")
+    else:
+        def s_transpose_in(aux, x):
+            xf = jax.lax.all_gather(x, axis, axis=0, tiled=True) if p > 1 \
+                else x
+            return jnp.take(xf, aux["perm"], axis=0)[:, None]
+        tin_out, tin_outputs = shv, ("xt",)
 
     def s_upsweep(d, xt):
         xh, xtop = _local_upsweep(dshape, d, xt.reshape(nl, m, -1), axis)
@@ -157,7 +209,8 @@ def build_solve_stages(parts: Dict, mesh, comm: str, loop_m: int = 12):
         def s_exchange(d, xt, sweep):
             xh, _ = to_dicts(sweep)
             chunks = _hp_pack_exchange(dshape, d, xh,
-                                       xt.reshape(nl, m, -1), axis, comm)
+                                       xt.reshape(nl, m, -1), axis, comm,
+                                       merged=fused)
             return tuple(chunks[dl] for dl in deltas)
 
         payload_spec = tuple(sh for _ in deltas)
@@ -166,7 +219,7 @@ def build_solve_stages(parts: Dict, mesh, comm: str, loop_m: int = 12):
             xh, xtop = to_dicts(sweep)
             yh, ytop, yde = _coupling_phase_overlap(
                 dshape, d, xh, xtop, xt.reshape(nl, m, -1), axis, comm,
-                chunks=dict(zip(deltas, payload)))
+                chunks=dict(zip(deltas, payload)), hide_flops=hide)
             return (tuple(yh[l] for l in br_levels),
                     tuple(ytop[l] for l in range(lc)), yde)
     else:
@@ -201,18 +254,35 @@ def build_solve_stages(parts: Dict, mesh, comm: str, loop_m: int = 12):
                                 dict(zip(range(lc), ytop_t)), axis)
         return (y_lr + yde).reshape(dshape.n_local(), -1)[:, 0]
 
-    def s_transpose_out(aux, kut):
-        kf = jax.lax.all_gather(kut, axis, axis=0, tiled=True) if p > 1 \
-            else kut
-        return jnp.take(kf, aux["unperm"], axis=0)
+    if fused:
+        def s_transpose_out(aux, kut):
+            ku, _ = transpose_a2a(kut, aux["tout_send"],
+                                  aux["tout_take"], axis)
+            return ku
 
-    def s_stencil(mga, x, ku):
-        u = x.reshape(n // p if p > 1 else n, n)
-        local = _mg_apply_op(mg, mga, 0, u, axis).reshape(x.shape)
-        return (h * h) * (ku + local)
+        def s_stencil(mga, x, ku, top, bot):
+            u = x.reshape(n // p, n)
+            local = _mg_apply_op(mg, mga, 0, u, axis,
+                                 halo=(top, bot)).reshape(x.shape)
+            return (h * h) * (ku + local)
+
+        sten_in, sten_inputs = (mg_spec, sh, sh, sh, sh), \
+            ("mga", "xvec", "ku", "top", "bot")
+    else:
+        def s_transpose_out(aux, kut):
+            kf = jax.lax.all_gather(kut, axis, axis=0, tiled=True) \
+                if p > 1 else kut
+            return jnp.take(kf, aux["unperm"], axis=0)
+
+        def s_stencil(mga, x, ku):
+            u = x.reshape(n // p if p > 1 else n, n)
+            local = _mg_apply_op(mg, mga, 0, u, axis).reshape(x.shape)
+            return (h * h) * (ku + local)
+
+        sten_in, sten_inputs = (mg_spec, sh, sh), ("mga", "xvec", "ku")
 
     def s_precond(mga, r):
-        return mg_precond_local(mg, mga, r, axis)
+        return mg_precond_local(mg, mga, r, axis, fused=fused, bf16=bf16)
 
     def s_scalars(x, r, pv, z, ap, rz):
         # the PCG body minus apply_a/precond: psum'd dots + axpys
@@ -227,8 +297,8 @@ def build_solve_stages(parts: Dict, mesh, comm: str, loop_m: int = 12):
         return x2, r2, p2, rz2, res
 
     defs = [
-        ("solve/transpose-in", s_transpose_in, (aux_spec, sh), shv,
-         ("aux", "xvec"), ("xt",)),
+        ("solve/transpose-in", s_transpose_in, (aux_spec, sh), tin_out,
+         ("aux", "xvec"), tin_outputs),
         ("hgemv/upsweep", s_upsweep, (dspec, shv), sweep_spec,
          ("d", "xt"), ("sweep",)),
         ("hgemv/exchange", s_exchange, (dspec, shv, sweep_spec),
@@ -240,8 +310,8 @@ def build_solve_stages(parts: Dict, mesh, comm: str, loop_m: int = 12):
          ("d", "coupled"), ("kut",)),
         ("solve/transpose-out", s_transpose_out, (aux_spec, sh), sh,
          ("aux", "kut"), ("ku",)),
-        ("solve/stencil", s_stencil, (mg_spec, sh, sh), sh,
-         ("mga", "xvec", "ku"), ("ap",)),
+        ("solve/stencil", s_stencil, sten_in, sh,
+         sten_inputs, ("ap",)),
         ("precond/vcycle", s_precond, (mg_spec, sh), sh,
          ("mga", "r"), ("z",)),
         ("krylov/scalars", s_scalars, (sh, sh, sh, sh, sh, rep),
@@ -425,7 +495,9 @@ def _worker(args: argparse.Namespace) -> None:
             phase_us[ph] = max(float(np.median(diffs)), 0.0) / loop_m * 1e6
             cum_us[ph] = float(np.median(acc[f"{comm}|p{k}"])) * 1e6
         phase_us_by_comm[comm] = phase_us
-        model = phase_comm_model(parts["dshape"], parts["mg"], comm)
+        model = phase_comm_model(parts["dshape"], parts["mg"], comm,
+                                 tcaps=parts.get("tcaps"),
+                                 fused=parts.get("fused"))
         records = []
         for s in stages:
             sargs = tuple(env[k] for k in s.inputs)
@@ -460,8 +532,10 @@ def _worker(args: argparse.Namespace) -> None:
                 float(np.median(acc[f"{comm}|p0"])) * 1e6, 1),
             "attributed_us": round(attributed, 1),
             "coverage": round(attributed / whole_us, 3),
+            "fused": bool(parts.get("fused")),
             "model_comm_bytes_per_iter": dist_solve_comm_bytes(
-                parts["dshape"], parts["mg"], comm),
+                parts["dshape"], parts["mg"], comm,
+                tcaps=parts.get("tcaps"), fused=parts.get("fused")),
         }
 
     if "halo-plan" in phase_us_by_comm and "allgather" in phase_us_by_comm:

@@ -15,10 +15,20 @@ import re
 from typing import Dict, List, Optional, Tuple
 
 _COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\([^)]*\)\s*->")
+#: ``/*index=N*/`` annotations inside tuple types — stripped before any
+#: other regex runs (they carry '=' and '*', which poison the matchers)
+_COMMENT = re.compile(r"/\*.*?\*/")
+# the result type may be a plain shape OR a parenthesized tuple (an
+# ``all-to-all`` with per-peer operands returns one chunk per device)
 _COLL = re.compile(
-    r"=\s*[\w\[\],:{}\s]*?(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"=\s*(?:\([^()=]*\)\s*)?[\w\[\],:{}\s]*?"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
     r"collective-permute)(?:-start)?\(")
-_SHAPE_PREFIX = re.compile(r"=\s*\(?\s*((?:[a-z0-9]+\[[0-9,]*\][^)]*?,?\s*)+)")
+#: the instruction's RESULT type: either one parenthesized tuple (every
+#: element summed — a tuple-result ``all-to-all`` lands one chunk per
+#: device) or the first bare shape token.  Operand shapes sit inside the
+#: op's own ``(...)`` argument list further right and never match first.
+_RESULT = re.compile(r"=\s*(?:\(([^()]*)\)|([a-z0-9]+\[[0-9,]*\]))")
 _SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
 _CALLS = re.compile(r"(?:calls=|to_apply=|condition=|body=)%?([\w\.\-]+)")
 _WHILE = re.compile(r"while\(.*?\).*?condition=%?([\w\.\-]+).*?body=%?"
@@ -49,16 +59,17 @@ def split_computations(text: str) -> Dict[str, List[str]]:
         elif stripped == "}" and line and not line[0].isspace():
             cur = None
         elif cur is not None:
-            comps[cur].append(stripped)
+            comps[cur].append(_COMMENT.sub("", stripped))
     return comps
 
 
 def _line_bytes(line: str) -> int:
-    m = _SHAPE_PREFIX.search(line)
+    m = _RESULT.search(line)
     if not m:
         return 0
+    region = m.group(1) if m.group(1) is not None else m.group(2)
     total = 0
-    for dt, dims in _SHAPE.findall(m.group(1)):
+    for dt, dims in _SHAPE.findall(region):
         if dt not in _DTYPE_BYTES:
             continue
         n = 1
@@ -137,6 +148,7 @@ def collective_bytes_flat(text: str) -> Dict[str, float]:
     """Naive sum (no loop correction) — reported for comparison."""
     out: Dict[str, float] = {}
     for line in text.splitlines():
+        line = _COMMENT.sub("", line)
         m = _COLL.search(line)
         if m:
             out[m.group(1)] = out.get(m.group(1), 0) + _line_bytes(line)

@@ -7,7 +7,7 @@ from .krylov import (PCGState, SolveResult, STATUS_BREAKDOWN,
                      guards_enabled, pcg, pcg_init, pcg_segment,
                      set_guards_enabled)
 from .mg import GridMG, MGArrays, build_grid_mg, mg_halo_bytes, \
-    mg_precond_local, mg_specs
+    mg_precond_local, mg_specs, solver_hide_flops
 from .distributed import (krylov_comm_bytes, make_dist_krylov,
                           make_dist_krylov_segment, pcg_state_specs,
                           result_specs)
@@ -18,6 +18,6 @@ __all__ = [
     "STATUS_OK", "STATUS_NAN", "STATUS_INDEFINITE", "STATUS_STAGNATION",
     "STATUS_BREAKDOWN", "guards_enabled", "set_guards_enabled",
     "GridMG", "MGArrays", "build_grid_mg", "mg_precond_local", "mg_specs",
-    "mg_halo_bytes", "make_dist_krylov", "make_dist_krylov_segment",
-    "krylov_comm_bytes", "result_specs",
+    "mg_halo_bytes", "solver_hide_flops", "make_dist_krylov",
+    "make_dist_krylov_segment", "krylov_comm_bytes", "result_specs",
 ]

@@ -47,7 +47,7 @@ def make_dist_krylov_segment(dshape: DistH2Shape, mesh: Mesh, axis,
                              comm: str = "halo-plan", shift: float = 0.0,
                              tol: float = 1e-8, steps: int = 10,
                              maxiter: int = 200, schedule: str = "auto",
-                             backend: str = "jnp"):
+                             backend: str = "jnp", hide_flops: int = 0):
     """Segmented (checkpointable) distributed PCG on ``(shift*I + A)``.
 
     Returns the three jitted ``shard_map`` programs of the elastic solve
@@ -71,7 +71,7 @@ def make_dist_krylov_segment(dshape: DistH2Shape, mesh: Mesh, axis,
 
     def apply_a(d, x):
         y = dist_h2_matvec_local(dshape, d, x[:, None], axis, comm,
-                                 backend, schedule)[:, 0]
+                                 backend, schedule, hide_flops)[:, 0]
         return shift * x + y if shift else y
 
     def init_local(d, b):
@@ -106,12 +106,15 @@ def make_dist_krylov(dshape: DistH2Shape, mesh: Mesh, axis,
                      method: str = "pcg", comm: str = "halo-plan",
                      shift: float = 0.0, tol: float = 1e-8,
                      maxiter: int = 200, restart: int = 30,
-                     schedule: str = "auto", backend: str = "jnp"):
+                     schedule: str = "auto", backend: str = "jnp",
+                     hide_flops: int = 0):
     """Jitted ``(d, b) -> SolveResult`` solving ``(shift*I + A) x = b``.
 
     ``method``: ``"pcg"`` | ``"gmres"`` (b: [n]) or ``"block_cg"``
     (b: [n, nv], every RHS in one program).  ``d`` and ``b`` must be placed
     with ``dist_specs(dshape, axis)`` / ``P(axis)`` shardings.
+    ``hide_flops`` requests the solver-embedded matvec lowering (merged
+    single-round exchange, hide-aware auto schedule — ``core.dist``).
     """
     if method not in ("pcg", "gmres", "block_cg"):
         raise ValueError(f"unknown method {method!r}")
@@ -125,7 +128,7 @@ def make_dist_krylov(dshape: DistH2Shape, mesh: Mesh, axis,
         def apply_a(x):
             xm = x if multi else x[:, None]
             y = dist_h2_matvec_local(dshape, d, xm, axis, comm, backend,
-                                     schedule)
+                                     schedule, hide_flops)
             y = y if multi else y[:, 0]
             return shift * x + y if shift else y
 

@@ -28,7 +28,7 @@ wrapper over this module.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Tuple
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -66,10 +66,17 @@ class MGArrays:
     ks: List[jax.Array]
     dd: List[jax.Array]              # restricted diag(D) [n_l, n_l]
     jd: List[jax.Array]              # Jacobi diagonal gamma*ksum/h^2 + dd
+    #: per SHARDED level, the nu-row-extended coefficient strips feeding
+    #: the fused deep-halo smoother (``_smooth_deep``): global
+    #: [p*(n_l/p + 2*nu), 6, n_l] with field order (ke, kw, kn, ks, dd,
+    #: jd); out-of-domain ghost coefficients are 0 (jd ghost 1) so ghost
+    #: updates stay exactly +0.0.  Empty at p == 1.
+    hc: List[jax.Array] = dataclasses.field(default_factory=list)
 
     def tree_flatten(self):
         return ((tuple(self.ke), tuple(self.kw), tuple(self.kn),
-                 tuple(self.ks), tuple(self.dd), tuple(self.jd)), None)
+                 tuple(self.ks), tuple(self.dd), tuple(self.jd),
+                 tuple(self.hc)), None)
 
     @classmethod
     def tree_unflatten(cls, aux, ch):
@@ -106,6 +113,7 @@ def build_grid_mg(kappa, d_diag, gamma: float, h0: float, n: int, p: int = 1,
     k = np.asarray(kappa, np.float32)
     d = np.asarray(d_diag, np.float32)
     levels, hs = [], []
+    fields_np = []                   # per level (ke, kw, kn, ks, dd, jd)
     arrs = MGArrays([], [], [], [], [], [])
     nn, hh = n, h0
     while nn >= 4:
@@ -114,6 +122,7 @@ def build_grid_mg(kappa, d_diag, gamma: float, h0: float, n: int, p: int = 1,
         for lst, a in zip((arrs.ke, arrs.kw, arrs.kn, arrs.ks, arrs.dd,
                            arrs.jd), (ke, kw, kn, ks, d, jd)):
             lst.append(jnp.asarray(a))
+        fields_np.append((ke, kw, kn, ks, d, jd))
         levels.append(nn)
         hs.append(hh)
         k = _restrict_np(k)
@@ -126,6 +135,22 @@ def build_grid_mg(kappa, d_diag, gamma: float, h0: float, n: int, p: int = 1,
             if n_l % (2 * p) != 0:
                 break
             n_sharded += 1
+    if p > 1:
+        # nu-row-extended coefficient strips for the fused deep-halo
+        # smoother: out-of-domain ghosts get zero face/diag coefficients
+        # and a unit Jacobi diagonal, so a ghost row's update is exactly
+        # ``u + omega*(b_ext - 0)/1`` — +0.0 whenever its b/u ghosts are
+        # zero, reproducing the Dirichlet zero-fill of ``_halo_rows``
+        kh = nu
+        for l in range(n_sharded):
+            n_l, rows = levels[l], levels[l] // p
+            padded = [np.pad(f, ((kh, kh), (0, 0)),
+                             constant_values=1.0 if i == 5 else 0.0)
+                      for i, f in enumerate(fields_np[l])]
+            stacked = np.stack(padded, axis=1)   # [n_l + 2kh, 6, n_l]
+            arrs.hc.append(jnp.asarray(np.concatenate(
+                [stacked[q * rows:q * rows + rows + 2 * kh]
+                 for q in range(p)], axis=0)))
     mg = GridMG(n=n, p=p, levels=tuple(levels), hs=tuple(hs),
                 n_sharded=n_sharded, gamma=gamma, nu=nu, omega=omega,
                 n_cycles=n_cycles)
@@ -137,8 +162,10 @@ def mg_specs(mg: GridMG, axis) -> MGArrays:
     from jax.sharding import PartitionSpec as P
     specs = [P(axis) if mg.sharded(l) else P()
              for l in range(len(mg.levels))]
+    n_hc = mg.n_sharded if mg.p > 1 else 0
     return MGArrays(ke=list(specs), kw=list(specs), kn=list(specs),
-                    ks=list(specs), dd=list(specs), jd=list(specs))
+                    ks=list(specs), dd=list(specs), jd=list(specs),
+                    hc=[P(axis)] * n_hc)
 
 
 # ---------------------------------------------------------------------------
@@ -154,10 +181,18 @@ def _halo_rows(u: jax.Array, axis, p: int):
     return top, bot
 
 
-def _apply_op(mg: GridMG, a: MGArrays, l: int, u: jax.Array, axis
-              ) -> jax.Array:
-    """(gamma*C + diag(D)) u on level ``l`` (strip or replicated layout)."""
-    if mg.sharded(l):
+def _apply_op(mg: GridMG, a: MGArrays, l: int, u: jax.Array, axis,
+              halo=None) -> jax.Array:
+    """(gamma*C + diag(D)) u on level ``l`` (strip or replicated layout).
+
+    ``halo`` optionally supplies already-landed ``(top, bot)`` neighbor
+    rows (each ``[1, n_l]``) — the fused solver iteration rides them on
+    the grid->tree transposition ``all_to_all`` instead of a dedicated
+    ``ppermute`` pair.
+    """
+    if halo is not None:
+        top, bot = halo
+    elif mg.sharded(l):
         top, bot = _halo_rows(u, axis, mg.p)
     else:
         top = jnp.zeros_like(u[:1])
@@ -177,6 +212,77 @@ def _smooth(mg: GridMG, a: MGArrays, l: int, u, b, axis):
     return u
 
 
+def _halo_rows_k(u: jax.Array, axis, p: int, k: int):
+    """``k``-row halo from the strip neighbors (zeros at the boundary).
+
+    ``k`` may exceed the strip height: hop ``j`` fetches from the
+    neighbor ``j`` strips away with one ``ppermute`` (2*ceil(k/rows)
+    permutes total, never per-sweep).  Row order is global top-to-bottom.
+    """
+    rows = u.shape[0]
+    tops, bots = [], []
+    j = -(-k // rows)                       # farthest hop first (top halo)
+    while j > 0:
+        t = min(k - (j - 1) * rows, rows)   # rows owed by hop j
+        if j >= p:                          # beyond the domain: Dirichlet
+            z = jnp.zeros((t,) + u.shape[1:], u.dtype)
+            tops.append(z)
+            bots.append(z)
+        else:
+            tops.append(jax.lax.ppermute(
+                u[rows - t:], axis, [(s, s + j) for s in range(p - j)]))
+            bots.append(jax.lax.ppermute(
+                u[:t], axis, [(s, s - j) for s in range(j, p)]))
+        j -= 1
+    top = jnp.concatenate(tops, axis=0) if len(tops) > 1 else tops[0]
+    bot = jnp.concatenate(bots[::-1], axis=0) if len(bots) > 1 else bots[0]
+    return top, bot
+
+
+def _extend(x: jax.Array, axis, p: int, kh: int, k: int, bf16: bool):
+    """Strip -> ``kh``-row-extended strip with ``k`` real halo rows per
+    side (zero-padded to ``kh``).  ``bf16`` rounds the shipped halo rows
+    only — own rows stay exact."""
+    if k <= 0:
+        z = jnp.zeros((kh,) + x.shape[1:], x.dtype)
+        return jnp.concatenate([z, x, z], axis=0)
+    src = x
+    if bf16:
+        src = jax.lax.optimization_barrier(x.astype(jnp.bfloat16))
+    top, bot = _halo_rows_k(src, axis, p, k)
+    top, bot = top.astype(x.dtype), bot.astype(x.dtype)
+    parts = [top, x, bot]
+    if k < kh:
+        z = jnp.zeros((kh - k,) + x.shape[1:], x.dtype)
+        parts = [z] + parts + [z]
+    return jnp.concatenate(parts, axis=0)
+
+
+def _smooth_deep(mg: GridMG, a: MGArrays, l: int, u_ext, b_ext, axis):
+    """``nu`` weighted-Jacobi sweeps on the ``nu``-row-extended strip with
+    ZERO per-sweep communication (the fused schedule, DESIGN.md §12).
+
+    Bitwise-identical to ``_smooth`` on the own rows: each sweep
+    recomputes the ghost rows from the neighbor's exact operands (the
+    extended coefficient strips ``a.hc[l]``), so a ghost row holds the
+    same bits the neighbor computes for it; validity shrinks one row per
+    sweep and the ``b`` halo needs only depth ``nu - 1``.  The caller
+    slices ``[nu:-nu]``."""
+    hc = a.hc[l]                            # [rows + 2nu, 6, n_l]
+    ke, kw, kn, ks, dd, jd = (hc[:, i] for i in range(6))
+    h = mg.hs[l]
+    u = u_ext
+    for _ in range(mg.nu):
+        ue = jnp.concatenate([jnp.zeros_like(u[:1]), u,
+                              jnp.zeros_like(u[:1])], axis=0)
+        uc = jnp.pad(u, ((0, 0), (1, 1)))
+        lap = (ke * (ue[2:] - u) + kw * (ue[:-2] - u)
+               + kn * (uc[:, 2:] - u) + ks * (uc[:, :-2] - u))
+        au = mg.gamma * (-lap / (h * h)) + dd * u
+        u = u + mg.omega * (b_ext - au) / jd
+    return u
+
+
 def _restrict(r):
     return 0.25 * (r[0::2, 0::2] + r[1::2, 0::2] + r[0::2, 1::2]
                    + r[1::2, 1::2])
@@ -192,11 +298,28 @@ def _prolong(e):
     return out
 
 
-def _vcycle(mg: GridMG, a: MGArrays, l: int, b, axis):
+def _vcycle(mg: GridMG, a: MGArrays, l: int, b, axis, fused: bool = False,
+            bf16: bool = False):
     # python recursion over static levels: each level's ops get their own
     # named scope ("mg/level0", "mg/level1", ...) in profiles
+    #
+    # fused (DESIGN.md §12): sharded levels smooth on the nu-row-extended
+    # strip — ONE (nu-1)-row exchange of b before the pre-smooth and ONE
+    # nu-row exchange of u before the post-smooth replace the 2*nu
+    # per-sweep one-row halos, bitwise-identically (``_smooth_deep``).
+    # The restriction residual keeps its exact one-row ``_apply_op``
+    # exchange.  ``bf16`` (halo-plan-bf16 payloads) rounds only the
+    # smoothing-halo rows; residual exchanges stay fp32.
+    deep = fused and mg.sharded(l) and l < len(a.hc)
+    kh = mg.nu
+    b_ext = None
     with phase(f"mg/level{l}"):
-        u = _smooth(mg, a, l, jnp.zeros_like(b), b, axis)
+        if deep:
+            b_ext = _extend(b, axis, mg.p, kh, mg.nu - 1, bf16)
+            u = _smooth_deep(mg, a, l, jnp.zeros_like(b_ext), b_ext,
+                             axis)[kh:-kh]
+        else:
+            u = _smooth(mg, a, l, jnp.zeros_like(b), b, axis)
         if l + 1 < len(mg.levels):
             r = b - _apply_op(mg, a, l, u, axis)
             rc = _restrict(r)
@@ -208,19 +331,23 @@ def _vcycle(mg: GridMG, a: MGArrays, l: int, b, axis):
         with phase("mg/coarse-gather"):
             rlc = rc.shape[0]
             rc_full = jax.lax.all_gather(rc, axis, axis=0, tiled=True)
-        e = _vcycle(mg, a, l + 1, rc_full, axis)
+        e = _vcycle(mg, a, l + 1, rc_full, axis, fused, bf16)
         me = jax.lax.axis_index(axis)
         e = jax.lax.dynamic_slice_in_dim(e, me * rlc, rlc, axis=0)
     else:
-        e = _vcycle(mg, a, l + 1, rc, axis)
+        e = _vcycle(mg, a, l + 1, rc, axis, fused, bf16)
     with phase(f"mg/level{l}"):
         u = u + _prolong(e)
-        u = _smooth(mg, a, l, u, b, axis)
+        if deep:
+            u_ext = _extend(u, axis, mg.p, kh, kh, bf16)
+            u = _smooth_deep(mg, a, l, u_ext, b_ext, axis)[kh:-kh]
+        else:
+            u = _smooth(mg, a, l, u, b, axis)
     return u
 
 
-def mg_precond_local(mg: GridMG, a: MGArrays, r: jax.Array, axis=None
-                     ) -> jax.Array:
+def mg_precond_local(mg: GridMG, a: MGArrays, r: jax.Array, axis=None,
+                     fused: bool = False, bf16: bool = False) -> jax.Array:
     """Apply ``n_cycles`` V-cycles to the flat residual ``r``.
 
     Single-device: ``r`` is the full [n*n] grid-order vector.  Inside
@@ -228,6 +355,11 @@ def mg_precond_local(mg: GridMG, a: MGArrays, r: jax.Array, axis=None
     The incoming residual is scaled by ``1/h^2`` — the preconditioner
     inverts the UNSCALED local operator ``gamma*C + diag(D)`` while the
     fractional system carries the paper's ``h^2`` prefactor.
+
+    ``fused``: comm-avoiding deep-halo smoothing on sharded levels (3
+    exchanges per level per cycle instead of ``2*nu + 1``, bitwise-equal
+    results); ``bf16`` additionally rounds the smoothing-halo payloads
+    (halo-plan-bf16 comm modes).
     """
     with phase("precond/vcycle"):
         h0 = mg.hs[0]
@@ -240,21 +372,27 @@ def mg_precond_local(mg: GridMG, a: MGArrays, r: jax.Array, axis=None
         u = jnp.zeros_like(b)
         for _ in range(mg.n_cycles):
             u = u + _vcycle(mg, a, 0, b - _apply_op(mg, a, 0, u, axis),
-                            axis)
+                            axis, fused, bf16)
         if gathered:
             me = jax.lax.axis_index(axis)
             u = jax.lax.dynamic_slice_in_dim(u, me * rows, rows, axis=0)
         return u.reshape(r.shape)
 
 
-def mg_halo_bytes(mg: GridMG, bytes_per_el: int = 4) -> int:
+def mg_halo_bytes(mg: GridMG, bytes_per_el: int = 4, fused: bool = False,
+                  bf16: bool = False) -> int:
     """Per-device collective bytes of ONE preconditioner application.
 
-    Each stencil application on a sharded level ships two halo rows; one
-    V-cycle does ``2*nu + 2`` stencil applications per non-coarsest level
-    (two smooths + the restriction residual + the cycle-entry residual is
-    counted once at level 0 by the caller loop) and ``nu`` on the coarsest.
-    The sharded->replicated switch adds one coarse-grid all_gather.
+    Unfused: each stencil application on a sharded level ships two halo
+    rows; one V-cycle does ``2*nu + 2`` stencil applications per
+    non-coarsest level (two smooths + the restriction residual + the
+    cycle-entry residual is counted once at level 0 by the caller loop)
+    and ``nu`` on the coarsest.  Fused (deep-halo smoothing, DESIGN.md
+    §12): the pre-smooth ships one ``(nu-1)``-row b halo, the post-smooth
+    one ``nu``-row u halo (both at ``bf16`` width when the comm mode
+    rounds payloads), and only the residual exchanges remain one-row
+    fp32.  The sharded->replicated switch adds one coarse-grid
+    all_gather either way.
     """
     if mg.p <= 1:
         return 0
@@ -264,12 +402,50 @@ def mg_halo_bytes(mg: GridMG, bytes_per_el: int = 4) -> int:
         return (mg.p - 1) * (mg.n // mg.p) * mg.n * bytes_per_el
     total = 0
     nlev = len(mg.levels)
+    bpe_h = 2 if (fused and bf16) else bytes_per_el
     for l in range(min(mg.n_sharded, nlev)):
-        apps = mg.nu if l == nlev - 1 else 2 * mg.nu + 1
-        if l == 0:
-            apps += 1                       # cycle-entry residual
-        total += apps * 2 * mg.levels[l] * bytes_per_el
+        n_l = mg.levels[l]
+        if fused:
+            rows_h = mg.nu - 1                    # pre-smooth b halo
+            if l < nlev - 1:
+                rows_h += mg.nu                   # post-smooth u halo
+            total += 2 * rows_h * n_l * bpe_h
+            resid = 1 if l < nlev - 1 else 0      # restriction residual
+            if l == 0:
+                resid += 1                        # cycle-entry residual
+            total += resid * 2 * n_l * bytes_per_el
+        else:
+            apps = mg.nu if l == nlev - 1 else 2 * mg.nu + 1
+            if l == 0:
+                apps += 1                         # cycle-entry residual
+            total += apps * 2 * n_l * bytes_per_el
     if 0 < mg.n_sharded < nlev:
         n_sw = mg.levels[mg.n_sharded]      # replicated coarse side
         total += (mg.p - 1) * (n_sw * n_sw // mg.p) * bytes_per_el
     return total * mg.n_cycles
+
+
+def solver_hide_flops(mg: Optional[GridMG], nv: int = 1) -> int:
+    """Static per-iteration estimate of the solver compute OUTSIDE the
+    H^2 matvec — the C-stencil application plus the V-cycle smoothing —
+    available to hide H^2 halo transfers under.  Feeds the solver-aware
+    ``schedule="auto"`` policy (``core.dist._use_split``): when this
+    dwarfs a level's coupling-GEMM flops the split schedule's padded
+    off-diagonal GEMM buys nothing, so auto keeps the combined form and
+    the merged single-round exchange simply lands before phase C.
+    """
+    if mg is None:
+        return 0
+    pdiv = mg.p if mg.p > 1 else 1
+    # ~11 flops/point per 5-point stencil application, +4 for the Jacobi
+    # update riding each smoothing sweep
+    total = 11 * (mg.levels[0] ** 2 // pdiv)      # A's stencil term
+    vcyc = 0
+    nlev = len(mg.levels)
+    for l, n_l in enumerate(mg.levels):
+        pts = n_l * n_l // (pdiv if mg.sharded(l) else 1)
+        apps = mg.nu if l == nlev - 1 else 2 * mg.nu + 1
+        if l == 0:
+            apps += 1
+        vcyc += apps * 15 * pts
+    return (total + vcyc * mg.n_cycles) * nv

@@ -17,6 +17,12 @@ repeat calls, callback-free jaxpr — plus the end-to-end distributed
 fractional-diffusion solve against the single-device and dense-direct
 references.
 
+Fused iteration schedule (ISSUE 10, DESIGN.md §12): fused-vs-two-step
+parity across comms/schedules at p in {2, 8}, bf16 fused payloads with
+bounded iteration delta, jaxpr collective-count budgets (fused emits
+strictly fewer ppermute/all_gather, three all_to_all rounds), and
+solver-embedded Krylov (``hide_flops``) parity on both geometries.
+
 Observability layer (repro/obs): the *measured* collective bytes of the
 partitioned HLO (perf.hlo_cost, wire-normalized by obs.metrics) must
 agree with the analytic comm models for every comm mode, and the
@@ -191,6 +197,8 @@ def main():
                         "graded1d": (shape1, data1)})
     mg_gathered_check(rng)
     fractional_checks()
+    fused_solver_checks(rng, {"uniform2d": (shape, data),
+                              "graded1d": (shape1, data1)})
     obs_checks(mesh, dshape, ddata_dev, x_dev)   # LAST: clears jit caches
 
     print("ALL_OK")
@@ -456,6 +464,116 @@ def fractional_checks():
         print(f"OK frac_dist_p{p}", res["iters"], du, dd)
 
 
+def fused_solver_checks(rng, geometries):
+    """ISSUE 10 fused iteration schedule (DESIGN.md §12).
+
+    Parity matrix: the fused distributed fractional solve (grid<->tree
+    transpositions as plan-compressed all_to_alls with the C-stencil halo
+    riding the inbound lanes, ONE merged residue-class H^2 exchange,
+    deep-halo V-cycle smoothing) must match the two-step schedule
+    EXACTLY — same iteration count as the single-device reference and the
+    same solution — at p in {2, 8} for both fp32 comms and both GEMM
+    schedules.  bf16 fused payloads keep a bounded iteration delta.
+
+    Collective budget: the fused program's jaxpr must emit strictly fewer
+    ``ppermute`` AND ``all_gather`` than the two-step one (the whole point
+    of the restructuring), carry the three ``all_to_all`` rounds, and stay
+    callback-free.
+
+    Graded geometry rides through ``make_dist_krylov(hide_flops=...)``:
+    a solver-embedded H^2 matvec (merged exchange + compute-hidden
+    association) on the clustered 1D operator must agree with the
+    per-level exchange build within the same slack ``solver_checks``
+    grants psum reassociation.
+    """
+    from jaxpr_utils import collective_counts
+    from repro.apps.fractional import (FractionalProblem, make_dist_solve,
+                                       solve)
+    from repro.solvers import make_dist_krylov, solver_hide_flops
+
+    n = 16
+    ref = solve(n, h2_tol=1e-7, tol=1e-10)
+    prob = FractionalProblem(n).build()
+    b = jnp.ones((n * n,), jnp.float32) * prob["h"] ** 2
+    for p in (2, 8):
+        mesh_p = jax.make_mesh((p,), ("blk",))
+        b_dev = jax.device_put(b, NamedSharding(mesh_p, P("blk")))
+        fns = {}
+        for comm in ("halo-plan", "allgather"):
+            scheds = {(False, "auto"), (True, "auto"), (True, "overlap")}
+            for fused, sched in sorted(scheds):
+                parts = make_dist_solve(prob, mesh_p, comm=comm,
+                                        tol=1e-10, schedule=sched,
+                                        fused=fused)
+                assert parts["fused"] == fused
+                pargs = parts["place"](parts["args"])
+                res = jax.block_until_ready(parts["fn"](*pargs, b_dev))
+                du = (np.linalg.norm(
+                    np.asarray(res.x).reshape(n, n) - ref["u"])
+                    / np.linalg.norm(ref["u"]))
+                assert bool(res.converged), (p, comm, fused, sched)
+                assert int(res.iters) == ref["iters"], \
+                    (p, comm, fused, sched, int(res.iters), ref["iters"])
+                assert du < 1e-5, (p, comm, fused, sched, du)
+                if sched == "auto":
+                    fns[(comm, fused)] = (parts["fn"], pargs)
+            print(f"OK fused_parity_{comm}_p{p}", ref["iters"])
+
+        parts = make_dist_solve(prob, mesh_p, comm="halo-plan-bf16",
+                                tol=1e-10)
+        assert parts["fused"]          # halo-plan comms fuse by default
+        pargs = parts["place"](parts["args"])
+        res = jax.block_until_ready(parts["fn"](*pargs, b_dev))
+        du = (np.linalg.norm(np.asarray(res.x).reshape(n, n) - ref["u"])
+              / np.linalg.norm(ref["u"]))
+        assert bool(res.converged), (p, int(res.iters))
+        assert abs(int(res.iters) - ref["iters"]) <= 5, \
+            (p, int(res.iters), ref["iters"])
+        assert du < 1e-3, (p, du)
+        print(f"OK fused_bf16_solve_p{p}", int(res.iters), du)
+
+        if p == 8:
+            fn_f, a_f = fns[("halo-plan", True)]
+            fn_u, a_u = fns[("halo-plan", False)]
+            k_f = collective_counts(fn_f, *a_f, b_dev)
+            k_u = collective_counts(fn_u, *a_u, b_dev)
+            assert k_f["ppermute"] < k_u["ppermute"], (k_f, k_u)
+            assert k_f["all_gather"] < k_u["all_gather"], (k_f, k_u)
+            # T-in, merged H^2 exchange, T-out
+            assert k_f["all_to_all"] >= 3, k_f
+            assert k_u["all_to_all"] == 0, k_u
+            _assert_callback_free(fn_f, *a_f, b_dev)
+            _assert_callback_free(fn_u, *a_u, b_dev)
+            print("OK fused_collective_counts",
+                  dict(k_f), dict(k_u))
+
+    cfg = {"uniform2d": dict(tol=1e-6, slack=0, xerr=1e-4),
+           "graded1d": dict(tol=1e-4, slack=2, xerr=5e-3)}
+    assert solver_hide_flops(None) == 0    # no V-cycle -> nothing to hide
+    hide = 1 << 40                         # force compute-hidden association
+    for tag, (shp, dat) in geometries.items():
+        tol, slack, xerr = (cfg[tag][k] for k in ("tol", "slack", "xerr"))
+        b2 = jnp.asarray(rng.standard_normal(shp.n), jnp.float32)
+        for p in (2, 8):
+            mesh_p = jax.make_mesh((p,), ("blk",))
+            dsp, ddp = partition_h2(shp, dat, p)
+            ddev = place(mesh_p, dsp, ddp)
+            bdev = jax.device_put(b2, NamedSharding(mesh_p, P("blk")))
+            r0 = make_dist_krylov(dsp, mesh_p, "blk", method="pcg",
+                                  shift=1.0, tol=tol,
+                                  maxiter=250)(ddev, bdev)
+            r1 = make_dist_krylov(dsp, mesh_p, "blk", method="pcg",
+                                  shift=1.0, tol=tol, maxiter=250,
+                                  hide_flops=hide)(ddev, bdev)
+            assert bool(r0.converged) and bool(r1.converged), (tag, p)
+            assert abs(int(r1.iters) - int(r0.iters)) <= slack, \
+                (tag, p, int(r1.iters), int(r0.iters))
+            err = (np.linalg.norm(np.asarray(r1.x) - np.asarray(r0.x))
+                   / np.linalg.norm(np.asarray(r0.x)))
+            assert err < xerr, (tag, p, err)
+            print(f"OK fused_krylov_{tag}_p{p}", int(r1.iters), err)
+
+
 def obs_checks(mesh, dshape, dd, x_dev):
     """Measured-vs-modeled collective bytes + trace neutrality at p=8.
 
@@ -490,19 +608,22 @@ def obs_checks(mesh, dshape, dd, x_dev):
     prob = FractionalProblem(n).build()
     b = jnp.ones((n * n,), jnp.float32) * prob["h"] ** 2
     b_dev = jax.device_put(b, NamedSharding(mesh, P("blk")))
-    solve_meas, solve_model, solve_parts = {}, {}, {}
+    solve_meas, solve_model = {}, {}
     for comm in ("halo-plan", "allgather"):
+        # two-step schedule pinned explicitly: the delta check below
+        # relies on the transposition/precond bytes being identical
+        # across comm modes so only the exchange volume survives
         parts = make_dist_solve(prob, mesh, comm=comm, tol=1e-8,
-                                maxiter=200)
+                                maxiter=200, fused=False)
         pargs = parts["place"](parts["args"])
         by_kind = metrics.measured_collective_bytes(parts["fn"],
                                                     *pargs, b_dev)
         meas = metrics.wire_bytes(by_kind, dshape.p)
-        model = dist_solve_comm_bytes(parts["dshape"], parts["mg"], comm)
+        model = dist_solve_comm_bytes(parts["dshape"], parts["mg"], comm,
+                                      fused=False)
         ratio = meas / model
         assert 1.0 <= ratio <= 2.5, (comm, meas, model, by_kind)
         solve_meas[comm], solve_model[comm] = meas, model
-        solve_parts[comm] = (parts, pargs)
         print(f"OK obs_solve_bytes_{comm}", meas, model, round(ratio, 3))
     d_meas = solve_meas["halo-plan"] - solve_meas["allgather"]
     d_model = solve_model["halo-plan"] - solve_model["allgather"]
@@ -510,12 +631,29 @@ def obs_checks(mesh, dshape, dd, x_dev):
         (d_meas, d_model)
     print("OK obs_comm_delta", d_meas, d_model)
 
+    # the fused schedule (halo-plan default) against ITS model — merged
+    # exchange + plan-compressed transposition all_to_alls + fused
+    # V-cycle halos (dist_solve_comm_bytes with tcaps/fused)
+    parts_f = make_dist_solve(prob, mesh, comm="halo-plan", tol=1e-8,
+                              maxiter=200)
+    assert parts_f["fused"]
+    pargs_f = parts_f["place"](parts_f["args"])
+    by_kind = metrics.measured_collective_bytes(parts_f["fn"],
+                                                *pargs_f, b_dev)
+    meas_f = metrics.wire_bytes(by_kind, dshape.p)
+    model_f = dist_solve_comm_bytes(parts_f["dshape"], parts_f["mg"],
+                                    "halo-plan", tcaps=parts_f["tcaps"],
+                                    fused=True)
+    ratio_f = meas_f / model_f
+    assert 1.0 <= ratio_f <= 2.5, (meas_f, model_f, by_kind)
+    print("OK obs_solve_bytes_fused", meas_f, model_f, round(ratio_f, 3))
+
     def fresh_jaxpr(fn, *fargs):
         jax.clear_caches()
         return str(jax.make_jaxpr(fn)(*fargs))
 
     mv = make_dist_matvec(dshape, mesh, "blk", comm="halo-plan")
-    parts, pargs = solve_parts["halo-plan"]
+    parts, pargs = parts_f, pargs_f      # neutrality on the fused program
     assert trace.enabled()
     mv_on = fresh_jaxpr(mv, dd, x_dev)
     sv_on = fresh_jaxpr(parts["fn"], *pargs, b_dev)

@@ -28,3 +28,19 @@ def assert_callback_free(fn, *args, expect_while: bool = True):
     if expect_while:
         assert any(p == "while" for p in prims), set(prims)
     assert not any("callback" in p for p in prims), set(prims)
+
+
+#: the cross-device collectives a distributed iteration can emit
+COLLECTIVE_PRIMS = ("ppermute", "all_gather", "all_to_all", "psum")
+
+
+def collective_counts(fn, *args):
+    """Static per-trace occurrence count of each collective primitive in
+    ``fn``'s jaxpr (recursing through while/cond/shard_map bodies).  A
+    primitive inside a ``while`` body counts ONCE per appearance — i.e.
+    per loop iteration — which is exactly the per-iteration collective
+    budget the fused-schedule tests pin."""
+    import jax
+    prims = walk_primitives(jax.make_jaxpr(fn)(*args).jaxpr, [])
+    return {name: sum(1 for p in prims if p == name)
+            for name in COLLECTIVE_PRIMS}

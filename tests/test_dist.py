@@ -36,6 +36,7 @@ def test_distributed_h2_8dev():
                "OK obs_comm_bytes_allgather",
                "OK obs_solve_bytes_halo-plan",
                "OK obs_solve_bytes_allgather", "OK obs_comm_delta",
+               "OK obs_solve_bytes_fused", "OK fused_collective_counts",
                "OK obs_trace_neutral_matvec", "OK obs_trace_neutral_solve",
                "OK serving_dist_cache", "OK serving_dist_fault",
                "ALL_OK"]
@@ -45,7 +46,12 @@ def test_distributed_h2_8dev():
             markers += [f"OK repartition_{tag}_p8to{p_new}"]
         for p in (2, 8):
             markers += [f"OK solver_pcg_{tag}_p{p}",
-                        f"OK solver_gmres_{tag}_p{p}"]
+                        f"OK solver_gmres_{tag}_p{p}",
+                        f"OK fused_krylov_{tag}_p{p}"]
+    for p in (2, 8):
+        markers += [f"OK fused_parity_halo-plan_p{p}",
+                    f"OK fused_parity_allgather_p{p}",
+                    f"OK fused_bf16_solve_p{p}"]
     markers += ["OK frac_dist_p2", "OK frac_dist_p8"]
     for marker in markers:
         assert marker in out, (marker, out, proc.stderr)

@@ -115,7 +115,8 @@ HloModule test
 %body (arg: (s32[], f32[4])) -> (s32[], f32[4]) {
   %arg = (s32[], f32[4]) parameter(0)
   %x = f32[4] get-tuple-element(%arg), index=1
-  %ag = f32[4]{0} all-gather(%x), dimensions={0}
+  %ag = f32[4]{0} all-gather(f32[4]{0} %x), dimensions={0}
+  %a2a = (f32[4]{0}, f32[4]{0}, /*index=2*/f32[4]{0}) all-to-all(f32[4]{0} %x, f32[4]{0} %x, f32[4]{0} %x), dimensions={0}
   %i2 = s32[] get-tuple-element(%arg), index=0
   ROOT %t = (s32[], f32[4]) tuple(%i2, %ag)
 }
@@ -132,6 +133,11 @@ ENTRY %main (p: f32[4]) -> f32[4] {
         corr = hlo_cost.collective_bytes(hlo)
         assert flat["all-gather"] == 16
         assert corr["all-gather"] == 7 * 16, corr
+        # a tuple-result collective (the merged all_to_all lowering) sums
+        # EVERY result chunk — operand shapes and /*index=N*/ comments in
+        # the printed tuple type must not confuse the parser
+        assert flat["all-to-all"] == 3 * 16, flat
+        assert corr["all-to-all"] == 7 * 3 * 16, corr
 
     def test_jaxpr_cost_shard_map_scaled(self):
         from repro.perf.jaxpr_cost import analyze

@@ -1,0 +1,79 @@
+"""Static GEMM-schedule policy regressions (ISSUE 10 satellite).
+
+``core.dist._use_split`` decides, per H^2 level, whether the coupling
+GEMM runs as the §4.2 diag/off split twins or as one combined GEMM from
+the landed halo buffer.  The bugfix under test: ``schedule="auto"`` used
+to be a pure exchange-volume rule and ignored the surrounding solver —
+inside a fractional-diffusion iteration the C-stencil and V-cycle
+smoothing flops already hide the halo transfer, so paying the split's
+padded off-diagonal GEMM buys nothing.  ``hide_flops`` (estimated via
+``solvers.mg.solver_hide_flops``) now pins auto to the combined form
+whenever the solver's non-matvec compute dwarfs the level's GEMM.
+
+These pins are pure host-side policy — no devices, fast tier.
+"""
+import numpy as np
+
+from repro.core.dist import _use_split
+from repro.solvers import solver_hide_flops
+from repro.solvers.mg import build_grid_mg
+
+# an unbalanced level where the split's padded volume wins:
+# nloc*maxb_d + n_bnd*maxb_o = 100*4 + 2*10 = 420 < 1000 = nloc*maxb
+SPLIT_WINS = dict(nloc=100, maxb=10, maxb_d=4, n_bnd=2, maxb_o=10)
+# a balanced level (interior rows keep maxb_d == maxb): split only adds
+# the boundary padding, so the combined GEMM wins
+BALANCED = dict(nloc=100, maxb=10, maxb_d=10, n_bnd=2, maxb_o=10)
+
+
+def use_split(schedule, cfg, hide_flops=0, level_flops=0):
+    return _use_split(schedule, cfg["nloc"], cfg["maxb"], cfg["maxb_d"],
+                      cfg["n_bnd"], cfg["maxb_o"], hide_flops,
+                      level_flops)
+
+
+def test_forced_schedules_ignore_everything():
+    for cfg in (SPLIT_WINS, BALANCED):
+        assert use_split("overlap", cfg, hide_flops=1 << 40) is True
+        assert use_split("fused", cfg) is False
+
+
+def test_auto_comm_bound_volume_rule():
+    # no solver context: auto is the exchange-volume rule
+    assert use_split("auto", SPLIT_WINS) is True
+    assert use_split("auto", BALANCED) is False
+
+
+def test_auto_solver_aware_pins():
+    level = 2 * 1000 * 10  # stand-in per-level GEMM flops
+    # compute-bound: solver flops hide the halo -> combined, even where
+    # the volume rule would split
+    assert use_split("auto", SPLIT_WINS, hide_flops=10 * level,
+                     level_flops=level) is False
+    assert use_split("auto", SPLIT_WINS, hide_flops=level,
+                     level_flops=level) is False
+    # comm-bound: the level's GEMM dominates the hideable compute ->
+    # fall through to the volume rule
+    assert use_split("auto", SPLIT_WINS, hide_flops=level - 1,
+                     level_flops=level) is True
+    assert use_split("auto", BALANCED, hide_flops=level - 1,
+                     level_flops=level) is False
+    # hide_flops=0 is "no solver", not "zero-flop solver"
+    assert use_split("auto", SPLIT_WINS, hide_flops=0,
+                     level_flops=level) is True
+
+
+def test_solver_hide_flops_estimate():
+    assert solver_hide_flops(None) == 0
+    rng = np.random.default_rng(3)
+    n = 16
+    kappa = 1.0 + 0.5 * rng.random((n, n))
+    dd = 1.0 + rng.random((n, n))
+    mg, _ = build_grid_mg(kappa, dd, gamma=2.0, h0=2.0 / n, n=n, p=1)
+    base = solver_hide_flops(mg)
+    assert base > 0
+    # scales linearly in the vector count, and a sharded build estimates
+    # PER-DEVICE work (p divides the point counts)
+    assert solver_hide_flops(mg, nv=3) == 3 * base
+    mg2, _ = build_grid_mg(kappa, dd, gamma=2.0, h0=2.0 / n, n=n, p=2)
+    assert 0 < solver_hide_flops(mg2) < base
